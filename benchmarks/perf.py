@@ -1,0 +1,91 @@
+"""Substrate performance benches: kernels vs references (CPU wall time is
+NOT the TPU story — interpret mode — but µs/call regressions still catch
+algorithmic blowups), plus the model-level train-step microbench."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced, ShapeConfig
+from repro.configs.base import RunConfig
+from repro.kernels import ref as R
+from repro.kernels.ops import flash_attention, ssd_scan
+from repro.models import init_params, loss_fn, make_batch
+
+
+def _time(fn, *args, n=3) -> float:
+    fn(*args)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def kernel_flash_vs_ref() -> Dict[str, float]:
+    B, T, Hq, Hkv, d = 1, 256, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, T, Hq, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, T, Hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, T, Hkv, d))
+    t_kernel = _time(jax.jit(lambda q, k, v: flash_attention(q, k, v, True,
+                                                             None)), q, k, v)
+    ref = jax.jit(lambda q, k, v: R.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)))
+    t_ref = _time(ref, q, k, v)
+    err = float(jnp.abs(
+        flash_attention(q, k, v, True, None).transpose(0, 2, 1, 3)
+        - ref(q, k, v)).max())
+    return {"kernel_us": round(t_kernel), "ref_us": round(t_ref),
+            "max_err": err}
+
+
+def kernel_ssd_vs_ref() -> Dict[str, float]:
+    B, S, nh, hd, N = 1, 512, 4, 32, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(2), (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(3), (nh,)) * 0.5)
+    Bm = jax.random.normal(jax.random.PRNGKey(4), (B, S, 1, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(5), (B, S, 1, N))
+    t_kernel = _time(jax.jit(lambda *a: ssd_scan(*a, 128)[0]),
+                     x, dt, A, Bm, Cm)
+    t_ref = _time(jax.jit(lambda x, dt, A, Bm, Cm: R.ssd_scan_ref(
+        x, dt, A, Bm[:, :, 0], Cm[:, :, 0])[0]), x, dt, A, Bm, Cm)
+    y = ssd_scan(x, dt, A, Bm, Cm, 128)[0]
+    y_ref = R.ssd_scan_ref(x, dt, A, Bm[:, :, 0], Cm[:, :, 0])[0]
+    return {"kernel_us": round(t_kernel), "ref_us": round(t_ref),
+            "max_err": float(jnp.abs(y - y_ref).max())}
+
+
+def train_step_microbench() -> Dict[str, float]:
+    """Tokens/s of the reduced smollm on this host (CPU; scale reference)."""
+    cfg = get_reduced("smollm-135m", layers=4, d_model=128, vocab=512)
+    run = RunConfig(arch="bench", attn_impl="blockwise", remat="block")
+    shp = ShapeConfig("bench", seq_len=256, global_batch=4, kind="train")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg, shp)
+
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (l, _), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, run, batch, xent_chunk=128),
+            has_aux=True)(params)
+        p2, o2, _ = adamw_update(g, opt, params, lr=1e-3)
+        return p2, o2, l
+
+    params, opt, _ = step(params, opt, batch)      # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        params, opt, l = step(params, opt, batch)
+    jax.block_until_ready(l)
+    dt = (time.perf_counter() - t0) / 3
+    toks = 4 * 256
+    return {"step_ms": round(dt * 1e3, 1),
+            "tokens_per_s": round(toks / dt)}

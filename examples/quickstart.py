@@ -1,0 +1,51 @@
+"""Quickstart: measure the carbon of an end-to-end path and plan a transfer
+with all three of the paper's levers (time × space × overlay).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
+from repro.core.carbon.path import discover_path
+from repro.core.carbon.score import carbonscore
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.planner import SLA, CarbonPlanner, TransferJob
+from repro.core.scheduler.space_shift import best_source
+from repro.core.scheduler.time_shift import best_start_time
+
+
+def main():
+    # 1) measure: discover the path and its per-hop carbon (paper §3)
+    path = discover_path("uc", "tacc")
+    print(f"UC→TACC: {path.n_hops} hops, {path.distance_km():.0f} km")
+    for hop in path.hops:
+        print(f"  {hop.ip:15s} {hop.info.city:13s} {hop.zone:14s} "
+              f"CI={hop.ci(T0):6.1f} gCO2/kWh  rtt={hop.rtt_ms:.1f}ms")
+    print(f"path CI now: {path.ci(T0):.1f} gCO2/kWh")
+    print(f"carbonscore of 100GB in 2min here: "
+          f"{carbonscore(100e9, path.ci(T0), 120):.0f}  (Eq. 1)\n")
+
+    # 2) shift in time (§4.1)
+    d = best_start_time(path, now=T0, deadline=T0 + 24 * 3600,
+                        predicted_duration_s=3600)
+    print(f"time shift:  start +{(d.start_t - T0) / 3600:.0f}h -> "
+          f"CI {d.baseline_ci:.0f} -> {d.expected_ci:.0f} "
+          f"({d.savings_factor:.2f}x)")
+
+    # 3) shift in space (§4.2)
+    sc = best_source(["uc", "site_ne", "site_qc", "site_or"], "tacc", T0)
+    print(f"space shift: source={sc.source} "
+          f"CI={sc.expected_ci:.0f} ({sc.savings_factor:.2f}x vs worst)")
+
+    # 4) overlay + joint SLA plan (§4.3, §5)
+    ftns = [FTN("uc", "skylake", 10.0), FTN("m1", "apple_m1", 1.2),
+            FTN("tacc", "cascade_lake", 10.0)]
+    plan = CarbonPlanner(ftns).plan(TransferJob(
+        "quickstart", 500e9, ("uc", "site_ne"), "tacc",
+        SLA(deadline_s=24 * 3600), T0))
+    print(f"joint plan:  src={plan.source} ftn={plan.ftn} "
+          f"start +{(plan.start_t - T0) / 3600:.0f}h  "
+          f"{plan.predicted_emissions_g:.1f} gCO2  "
+          f"({plan.alternatives} alternatives searched)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Render the roofline table from a dryrun JSON (EXPERIMENTS.md source)."""
+import json
+import sys
+
+path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json"
+mesh_filter = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+recs = json.load(open(path))
+
+hdr = (f"{'arch':22s} {'shape':12s} {'kind':8s} {'t_comp':>9s} {'t_mem':>9s} "
+       f"{'t_coll':>9s} {'bound':>7s} {'MF/HLO':>7s} {'roofl%':>7s} "
+       f"{'args GiB':>9s} {'temp GiB':>9s} {'compile':>8s}")
+print(hdr)
+print("-" * len(hdr))
+for r in recs:
+    if r.get("mesh") != mesh_filter:
+        continue
+    if "skipped" in r:
+        print(f"{r['arch']:22s} {r['shape']:12s} {'—':8s} {r['skipped']}")
+        continue
+    if "error" in r:
+        print(f"{r['arch']:22s} {r['shape']:12s} ERROR {r['error'][:60]}")
+        continue
+    rf = r["roofline"]
+    m = r["memory"]
+    print(f"{r['arch']:22s} {r['shape']:12s} {r['kind']:8s} "
+          f"{rf['t_compute_s']:9.2e} {rf['t_memory_s']:9.2e} "
+          f"{rf['t_collective_s']:9.2e} {rf['bound']:>7s} "
+          f"{rf['useful_flops_ratio']:7.3f} "
+          f"{100*rf['roofline_fraction']:6.2f}% "
+          f"{m['argument_bytes']/2**30:9.2f} {m['temp_bytes']/2**30:9.2f} "
+          f"{r['compile_s']:7.0f}s")

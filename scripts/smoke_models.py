@@ -1,0 +1,31 @@
+"""Dev harness: run every reduced arch through train loss + prefill + decode."""
+import sys
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_reduced, ShapeConfig
+from repro.configs.base import RunConfig
+from repro.models import init_params, loss_fn, prefill, decode_step, make_batch, count_params
+
+run = RunConfig(arch="x", attn_impl="naive", remat="none")
+rng = jax.random.PRNGKey(0)
+only = sys.argv[1:] or ARCHS
+
+for arch in only:
+    cfg = get_reduced(arch)
+    shp = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+    params = init_params(rng, cfg)
+    batch = make_batch(rng, cfg, shp)
+    loss, m = jax.jit(lambda p, b: loss_fn(p, cfg, run, b, xent_chunk=16))(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    # prefill + decode
+    pshp = ShapeConfig("smoke_p", seq_len=32, global_batch=2, kind="prefill")
+    pb = make_batch(rng, cfg, pshp)
+    logits, cache = jax.jit(lambda p, b: prefill(p, cfg, run, b, s_max=32))(params, pb)
+    assert jnp.all(jnp.isfinite(logits)), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    logits2, cache = jax.jit(
+        lambda p, t, c, cur: decode_step(p, cfg, run, t, c, cur)
+    )(params, tok, cache, jnp.asarray(32, jnp.int32))
+    assert jnp.all(jnp.isfinite(logits2)), arch
+    print(f"OK {arch:22s} params={count_params(cfg):,} loss={float(loss):.3f}")

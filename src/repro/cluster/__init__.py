@@ -1,0 +1,8 @@
+from repro.cluster.topology import (Cluster, Pod, Site, default_cluster,
+                                    paper_testbed)
+from repro.cluster.faults import FaultInjector, FaultEvent, StragglerModel
+from repro.cluster.elastic import ElasticPlanner, ReMeshPlan
+
+__all__ = ["Cluster", "Pod", "Site", "default_cluster", "paper_testbed",
+           "FaultInjector", "FaultEvent", "StragglerModel",
+           "ElasticPlanner", "ReMeshPlan"]

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: carbon-aware end-to-end data movement.
+
+Subpackages:
+  carbon/     measurement — CI traces, geolocation, path carbon, end-system
+              energy models, the Eq.(1) carbonscore, Pmeter-style telemetry
+  scheduler/  the three levers — time shifting, space shifting, overlay FTN
+              selection/migration — plus the joint SLA planner
+  transfer/   the data-movement engine the scheduler drives
+"""

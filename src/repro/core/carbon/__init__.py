@@ -1,0 +1,17 @@
+from repro.core.carbon.intensity import (CITrace, GridRegion, REGIONS,
+                                         STATE_CARBON_INDEX, get_region,
+                                         region_ci)
+from repro.core.carbon.geo import geolocate, haversine_km, IPInfo
+from repro.core.carbon.path import Hop, NetworkPath, discover_path, path_ci
+from repro.core.carbon.energy import HostPowerModel, HOST_PROFILES, hop_power_w
+from repro.core.carbon.score import carbonscore, transfer_emissions_g, TransferLedger
+from repro.core.carbon.telemetry import (HostMetrics, NetworkMetrics,
+                                         TransferMetrics, Pmeter)
+
+__all__ = [
+    "CITrace", "GridRegion", "REGIONS", "STATE_CARBON_INDEX", "get_region",
+    "region_ci", "geolocate", "haversine_km", "IPInfo", "Hop", "NetworkPath",
+    "discover_path", "path_ci", "HostPowerModel", "HOST_PROFILES",
+    "hop_power_w", "carbonscore", "transfer_emissions_g", "TransferLedger",
+    "HostMetrics", "NetworkMetrics", "TransferMetrics", "Pmeter",
+]

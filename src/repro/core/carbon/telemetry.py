@@ -1,0 +1,140 @@
+"""Pmeter-analogue telemetry: the exact metric set of paper Table 1.
+
+``Pmeter.measure()`` emits one record per interval from the simulated host/
+transfer state (psutil/netstat are pointless inside this runtime — the
+fields and record flow match the open-source tool the paper builds on
+[github.com/didclab/pmeter]).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import uuid
+from typing import Dict, List, Optional
+
+from repro.core.carbon.energy import HOST_PROFILES, HostPowerModel
+
+
+@dataclasses.dataclass
+class HostMetrics:
+    core_count: int
+    free_memory: int
+    max_memory: int
+    memory: int
+    min_cpu_frequency_mhz: float
+    max_cpu_frequency_mhz: float
+    current_cpu_frequency_mhz: float
+    cpu_architecture: str
+    cpu_utilization: float
+
+
+@dataclasses.dataclass
+class NetworkMetrics:
+    drop_out: int
+    drop_in: int
+    error_in: int
+    error_out: int
+    dst_latency_ms: float
+    src_rtt_ms: float
+    dst_rtt_ms: float
+    nic_mtu: int
+    network_interface: str
+    packet_sent: int
+    packet_received: int
+    nic_speed_mbps: float
+    read_throughput_bps: float
+    write_throughput_bps: float
+
+
+@dataclasses.dataclass
+class TransferMetrics:
+    job_uuid: str
+    source_latency_ms: float
+    job_size_bytes: int
+    transfer_node_id: str
+    buffer_size: int
+    parallelism: int
+    concurrency: int
+    pipelining: int
+    bytes_received: int
+    bytes_sent: int
+
+
+@dataclasses.dataclass
+class PmeterRecord:
+    t: float
+    host: HostMetrics
+    network: NetworkMetrics
+    transfer: Optional[TransferMetrics]
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+
+_ARCH = {"cascade_lake": "x86_64", "skylake": "x86_64", "apple_m1": "arm64",
+         "tpu_host": "x86_64", "storage_frontend": "x86_64"}
+
+
+class Pmeter:
+    """Per-node metric collector, fed by the transfer engine."""
+
+    def __init__(self, node_id: str, profile: str = "tpu_host",
+                 interface: str = "eth0", mtu: int = 9000):
+        self.node_id = node_id
+        self.profile: HostPowerModel = HOST_PROFILES[profile]
+        self.profile_name = profile
+        self.interface = interface
+        self.mtu = mtu
+        self.records: List[PmeterRecord] = []
+        self._pkts_sent = 0
+        self._pkts_recv = 0
+
+    def measure(self, t: float, *, cpu_util: float, mem_util: float,
+                tx_gbps: float, rx_gbps: float, rtt_src_ms: float = 0.2,
+                rtt_dst_ms: float = 20.0,
+                transfer: Optional[TransferMetrics] = None) -> PmeterRecord:
+        p = self.profile
+        mem_total = 192 * 2**30 if p.cores >= 40 else 16 * 2**30
+        used = int(mem_total * min(mem_util, 1.0))
+        self._pkts_sent += int(tx_gbps * 1e9 / 8 / self.mtu)
+        self._pkts_recv += int(rx_gbps * 1e9 / 8 / self.mtu)
+        rec = PmeterRecord(
+            t=t,
+            host=HostMetrics(
+                core_count=p.cores,
+                free_memory=mem_total - used,
+                max_memory=mem_total,
+                memory=used,
+                min_cpu_frequency_mhz=800.0,
+                max_cpu_frequency_mhz=3800.0,
+                current_cpu_frequency_mhz=800.0 + 3000.0 * min(cpu_util, 1.0),
+                cpu_architecture=_ARCH[self.profile_name],
+                cpu_utilization=round(min(cpu_util, 1.0), 4),
+            ),
+            network=NetworkMetrics(
+                drop_out=0, drop_in=int(1e-6 * self._pkts_recv),
+                error_in=0, error_out=0,
+                dst_latency_ms=rtt_dst_ms / 2,
+                src_rtt_ms=rtt_src_ms, dst_rtt_ms=rtt_dst_ms,
+                nic_mtu=self.mtu, network_interface=self.interface,
+                packet_sent=self._pkts_sent, packet_received=self._pkts_recv,
+                nic_speed_mbps=p.nic_speed_gbps * 1000.0,
+                read_throughput_bps=rx_gbps * 1e9,
+                write_throughput_bps=tx_gbps * 1e9,
+            ),
+            transfer=transfer,
+        )
+        self.records.append(rec)
+        return rec
+
+    def power_w(self, rec: PmeterRecord) -> float:
+        nic_gbps = (rec.network.read_throughput_bps
+                    + rec.network.write_throughput_bps) / 1e9
+        mem_util = rec.host.memory / rec.host.max_memory
+        return self.profile.power_w(rec.host.cpu_utilization, mem_util,
+                                    nic_gbps)
+
+
+def new_job_uuid() -> str:
+    return str(uuid.uuid4())

@@ -1,0 +1,13 @@
+from repro.core.scheduler.forecast import (HarmonicForecaster,
+                                           PersistenceForecaster)
+from repro.core.scheduler.time_shift import best_start_time
+from repro.core.scheduler.space_shift import best_source
+from repro.core.scheduler.overlay import OverlayScheduler, best_ftn
+from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob, SLA
+from repro.core.scheduler.queue import CarbonAwareQueue
+
+__all__ = [
+    "HarmonicForecaster", "PersistenceForecaster", "best_start_time",
+    "best_source", "OverlayScheduler", "best_ftn", "CarbonPlanner", "Plan",
+    "TransferJob", "SLA", "CarbonAwareQueue",
+]

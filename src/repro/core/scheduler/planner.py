@@ -1,0 +1,143 @@
+"""The joint planner: time × space × overlay under an SLA [paper §5].
+
+Searches the (start slot, source replica, FTN) grid, predicting duration
+from the throughput model and emissions from the [14] power models, and
+minimizes a QoS-weighted objective:
+
+    cost = w_carbon · gCO₂(plan) + w_perf · duration / deadline_slack
+
+subject to: finish before the deadline; optional carbon budget. This is the
+"SLA" §5 proposes: the user picks the carbon/performance trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.carbon.energy import HOST_PROFILES
+from repro.core.carbon.path import NetworkPath, discover_path
+from repro.core.carbon.score import carbonscore, transfer_emissions_g
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.time_shift import expected_transfer_ci
+from repro.core.transfer.throughput import ThroughputModel
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    deadline_s: float                  # relative to submission
+    carbon_budget_g: Optional[float] = None
+    w_carbon: float = 1.0
+    w_perf: float = 0.0                # 0 = pure carbon minimization
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferJob:
+    uuid: str
+    size_bytes: float
+    replicas: Tuple[str, ...]          # candidate sources (space shifting)
+    dst: str                           # final destination endpoint
+    sla: SLA
+    submitted_t: float
+    parallelism: int = 4
+    concurrency: int = 2
+    pipelining: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    job_uuid: str
+    start_t: float
+    source: str
+    ftn: str
+    path: NetworkPath
+    predicted_gbps: float
+    predicted_duration_s: float
+    predicted_emissions_g: float
+    predicted_avg_ci: float
+    predicted_carbonscore: float
+    cost: float
+    feasible: bool
+    alternatives: int = 0
+
+
+class CarbonPlanner:
+    def __init__(self, ftns: Sequence[FTN],
+                 throughput: Optional[ThroughputModel] = None,
+                 slot_s: float = 3600.0,
+                 ci_fn: Optional[Callable[[NetworkPath, float], float]] = None):
+        self.ftns = list(ftns)
+        self.throughput = throughput or ThroughputModel()
+        self.slot_s = slot_s
+        self.ci_fn = ci_fn             # forecast hook; None = oracle trace
+
+    def _ci(self, path: NetworkPath, t0: float, dur: float) -> float:
+        if self.ci_fn is not None:
+            return self.ci_fn(path, t0)
+        return expected_transfer_ci(path, t0, dur)
+
+    def plan(self, job: TransferJob) -> Plan:
+        deadline_t = job.submitted_t + job.sla.deadline_s
+        best: Optional[Plan] = None
+        n_alt = 0
+        for ftn in self.ftns:
+            # an FTN relays source → ftn → dst; a direct transfer is the
+            # degenerate FTN co-located with dst.
+            for src in job.replicas:
+                legs = [(src, ftn.name)]
+                if ftn.name != job.dst:
+                    legs.append((ftn.name, job.dst))
+                gbps = min(self.throughput.predict(a, b, job.parallelism,
+                                                   job.concurrency)
+                           for a, b in legs)
+                gbps = min(gbps, ftn.max_gbps)
+                dur = job.size_bytes * 8.0 / (gbps * 1e9)
+                t = job.submitted_t
+                while t + dur <= deadline_t + 1e-9 or t == job.submitted_t:
+                    emis, ci_acc = 0.0, 0.0
+                    for (a, b) in legs:
+                        p = discover_path(a, b)
+                        emis += transfer_emissions_g(
+                            p, HOST_PROFILES["storage_frontend"],
+                            ftn.power_model, job.size_bytes, t, gbps,
+                            parallelism=job.parallelism,
+                            concurrency=job.concurrency)
+                        ci_acc += self._ci(p, t, dur)
+                    avg_ci = ci_acc / len(legs)
+                    feasible = t + dur <= deadline_t + 1e-9
+                    if job.sla.carbon_budget_g is not None:
+                        feasible &= emis <= job.sla.carbon_budget_g
+                    slack = max(job.sla.deadline_s, 1.0)
+                    cost = (job.sla.w_carbon * emis
+                            + job.sla.w_perf * (t + dur - job.submitted_t)
+                            / slack * emis if job.sla.w_perf else
+                            job.sla.w_carbon * emis)
+                    n_alt += 1
+                    cand = Plan(
+                        job_uuid=job.uuid, start_t=t, source=src,
+                        ftn=ftn.name, path=discover_path(src, ftn.name),
+                        predicted_gbps=gbps, predicted_duration_s=dur,
+                        predicted_emissions_g=emis, predicted_avg_ci=avg_ci,
+                        predicted_carbonscore=carbonscore(
+                            job.size_bytes, avg_ci, dur),
+                        cost=cost, feasible=feasible)
+                    if feasible and (best is None or cand.cost < best.cost):
+                        best = cand
+                    t += self.slot_s
+        if best is None:
+            # SLA-infeasible: start now on the best-throughput direct path
+            src = job.replicas[0]
+            gbps = self.throughput.predict(src, job.dst, job.parallelism,
+                                           job.concurrency)
+            dur = job.size_bytes * 8.0 / (gbps * 1e9)
+            p = discover_path(src, job.dst)
+            emis = transfer_emissions_g(
+                p, HOST_PROFILES["storage_frontend"],
+                HOST_PROFILES["tpu_host"], job.size_bytes,
+                job.submitted_t, gbps)
+            ci = self._ci(p, job.submitted_t, dur)
+            return Plan(job.uuid, job.submitted_t, src, job.dst, p, gbps,
+                        dur, emis, ci,
+                        carbonscore(job.size_bytes, ci, dur),
+                        cost=math.inf, feasible=False, alternatives=n_alt)
+        return dataclasses.replace(best, alternatives=n_alt)

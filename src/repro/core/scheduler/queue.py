@@ -1,0 +1,67 @@
+"""Carbon-aware job queue: jobs wait for their planned start slot; urgent
+jobs (exhausted slack) preempt greener-but-later ones. Priorities follow
+the data-center convention the paper cites [12]: priority bounds how far a
+job may be shifted in time/space.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob
+
+
+@dataclasses.dataclass(order=True)
+class _Entry:
+    start_t: float
+    seq: int
+    job: TransferJob = dataclasses.field(compare=False)
+    plan: Plan = dataclasses.field(compare=False)
+
+
+class CarbonAwareQueue:
+    def __init__(self, planner: CarbonPlanner):
+        self.planner = planner
+        self._heap: List[_Entry] = []
+        self._seq = 0
+        self.done: List[Tuple[TransferJob, Plan]] = []
+
+    def submit(self, job: TransferJob) -> Plan:
+        plan = self.planner.plan(job)
+        heapq.heappush(self._heap, _Entry(plan.start_t, self._seq, job, plan))
+        self._seq += 1
+        return plan
+
+    def due(self, now: float) -> List[Tuple[TransferJob, Plan]]:
+        """Pop every job whose planned start has arrived."""
+        out = []
+        while self._heap and self._heap[0].start_t <= now:
+            e = heapq.heappop(self._heap)
+            out.append((e.job, e.plan))
+        return out
+
+    def replan_pending(self, now: float) -> int:
+        """Re-plan queued jobs against fresh forecasts (carbon is
+        stochastic, §5). Returns how many plans changed."""
+        entries = list(self._heap)
+        self._heap = []
+        changed = 0
+        for e in entries:
+            job = dataclasses.replace(
+                e.job, submitted_t=now,
+                sla=dataclasses.replace(
+                    e.job.sla,
+                    deadline_s=max(e.job.submitted_t + e.job.sla.deadline_s
+                                   - now, 1.0)))
+            plan = self.planner.plan(job)
+            if (plan.source, plan.ftn, plan.start_t) != (
+                    e.plan.source, e.plan.ftn, e.plan.start_t):
+                changed += 1
+            heapq.heappush(self._heap,
+                           _Entry(plan.start_t, self._seq, e.job, plan))
+            self._seq += 1
+        return changed
+
+    def __len__(self) -> int:
+        return len(self._heap)

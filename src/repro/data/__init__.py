@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, ShardFetchRecord
+
+__all__ = ["TokenPipeline", "ShardFetchRecord"]

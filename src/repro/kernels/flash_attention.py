@@ -1,0 +1,126 @@
+"""Flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Grid: (batch·kv_heads·q_groups, T/bq, S/bk). The kv axis is minor-most so
+it iterates sequentially per q block; the running (max, sum, acc) state
+lives in VMEM scratch and persists across those iterations — the classic
+TPU flash schedule (online softmax, no S×S materialization; HBM traffic
+O(T·d + S·d) per head instead of O(T·S)).
+
+Causal/window masking is applied per element; fully-masked kv blocks are
+skipped with pl.when so the MXU never sees them (the FLOP win that the
+blockwise-jnp path cannot express).
+
+MXU alignment: block_q/block_kv default to 128 multiples; the head dim is
+padded to 128 by ops.py when needed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_kv: int, n_kv_blocks: int, seq_q: int,
+            seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # static-shape skip decision must be dynamic → pl.when on block overlap
+    def needed():
+        if not causal and window is None:
+            return True
+        ok = jnp.asarray(True)
+        if causal:  # block reachable iff some q >= some k
+            ok &= (q_start + block_q - 1) >= k_start
+        if window is not None:  # and not entirely left of the window
+            ok &= k_start + block_kv - 1 >= q_start - (window - 1)
+        return ok
+
+    @pl.when(needed())
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)           # [bq, d]
+        k = k_ref[...].astype(jnp.float32)           # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # [bq]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        corr = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        m_ref[...] = m_cur
+        v = v_ref[...].astype(jnp.float32)           # [bk, d]
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: [BH, T, d] (padded to block multiples); k/v: [BH, S, d].
+    BH enumerates (batch × q-head); GQA mapping is done by ops.py."""
+    BH, T, d = q.shape
+    S = k.shape[1]
+    n_q = T // block_q
+    n_kv = S // block_kv
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv_blocks=n_kv,
+        seq_q=T, seq_kv=S)
+
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_kv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

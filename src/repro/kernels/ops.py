@@ -1,0 +1,122 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Layout adaptation (model code ↔ kernel), padding to MXU-aligned blocks,
+GQA head mapping, and custom_vjp so the kernels are usable inside
+train_step: forward runs the Pallas kernel; backward recomputes through
+the jnp reference (the standard recompute-bwd pattern until a dedicated
+bwd kernel lands).
+
+On this CPU container the kernels run with interpret=True; on real TPU
+set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# ------------------------------------------------------- flash attention ---
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128) -> jax.Array:
+    """q: [B, T, Hq, d]; k/v: [B, S, Hkv, d] -> [B, T, Hq, d] (model layout)."""
+    B, T, Hq, d = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qk = q.transpose(0, 2, 1, 3)                       # [B,Hq,T,d]
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    # GQA: repeat kv heads to q heads (index-map indirection would avoid the
+    # copy on TPU; acceptable here and exact either way)
+    if g > 1:
+        kk = jnp.repeat(kk, g, axis=1)
+        vk = jnp.repeat(vk, g, axis=1)
+    qk = qk.reshape(B * Hq, T, d)
+    kk = kk.reshape(B * Hq, S, d)
+    vk = vk.reshape(B * Hq, S, d)
+    qk, pad_q = _pad_to(qk, 1, block_q)
+    kk, _ = _pad_to(kk, 1, block_kv)
+    vk, _ = _pad_to(vk, 1, block_kv)
+    out = flash_attention_kernel(qk, kk, vk, causal=causal, window=window,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=_interpret())
+    if pad_q:
+        out = out[:, :T, :]
+    return out.reshape(B, Hq, T, d).transpose(0, 2, 1, 3)
+
+
+def _fa_ref(q, k, v, causal, window):
+    o = R.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3),
+                              causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_kv):
+    return flash_attention(q, k, v, causal, window, block_q, block_kv), (q, k, v)
+
+
+def _fa_bwd(causal, window, block_q, block_kv, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _fa_ref(q, k, v, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# --------------------------------------------------------------- SSD scan --
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, chunk: int = 256
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Model layout: x [B,S,nh,hd], dt [B,S,nh], Bm/Cm [B,S,G,N] (G=1).
+    Returns (y [B,S,nh,hd], h_final [B,nh,hd,N])."""
+    assert Bm.shape[2] == 1, "kernel supports n_groups=1 (Mamba-2 default)"
+    xk = x.transpose(0, 2, 1, 3)                   # [B,nh,S,hd]
+    dtk = dt.transpose(0, 2, 1)                    # [B,nh,S]
+    y, h = ssd_scan_kernel(xk, dtk, A, Bm[:, :, 0], Cm[:, :, 0],
+                           chunk=chunk, interpret=_interpret())
+    return y.transpose(0, 2, 1, 3), h
+
+
+def _ssd_ref(x, dt, A, Bm, Cm):
+    return R.ssd_scan_ref(x, dt, A, Bm[:, :, 0], Cm[:, :, 0])
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, chunk):
+    return ssd_scan(x, dt, A, Bm, Cm, chunk), (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(lambda *args: _ssd_ref(*args), x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)

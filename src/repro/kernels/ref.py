@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: [B, Hq, T, d]; k/v: [B, Hkv, S, d] -> [B, Hq, T, d]."""
+    B, Hq, T, d = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qh = q.reshape(B, Hkv, g, T, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgtd,bksd->bkgts", qh,
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qi = jnp.arange(T)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, d).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x: [B,S,nh,hd]; dt: [B,S,nh] (>0); A: [nh] (<0); Bm/Cm: [B,S,N]
+    returns (y [B,S,nh,hd], h_final [B,nh,hd,N])."""
+    Bsz, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # [B,nh,hd],[B,nh],[B,N]
+        da = jnp.exp(dtt.astype(f32) * A.astype(f32)[None])
+        inc = jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(f32),
+                         xt.astype(f32), bt.astype(f32))
+        h = h * da[..., None, None] + inc
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(f32))
+        return h, y
+
+    h0 = jnp.zeros((Bsz, nh, hd, N), f32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_fin

@@ -1,0 +1,104 @@
+"""Mamba-2 SSD chunk scan for TPU (pl.pallas_call + BlockSpec tiling).
+
+Grid: (batch, n_heads, S/chunk) with the chunk axis minor-most
+(sequential); the recurrent state h [hd, N] lives in VMEM scratch and
+carries across chunk iterations — HBM sees each token exactly once
+(the jnp path materializes [B, nc, nh, Q, Q] decay tensors instead).
+
+Per (b, h, c) iteration, all in VMEM:
+    dA   = dt·A ; cs = cumsum(dA); L[i,j] = exp(cs_i − cs_j)·1[i≥j]
+    Ydiag = ((C Bᵀ) ⊙ L ⊙ dt_j) X
+    Yoff  = (C ⊙ exp(cs)) h_prevᵀ
+    h     = exp(cs_Q)·h_prev + Xᵀ(exp(cs_Q − cs) ⊙ dt ⊙ B)
+Writes y per chunk and the final state at the last chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, h_ref, *,
+            n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [Q, hd]
+    dt = dt_ref[...].astype(jnp.float32)        # [Q]
+    a = a_ref[0]                                # scalar (<0)
+    bm = b_ref[...].astype(jnp.float32)         # [Q, N]
+    cm = c_ref[...].astype(jnp.float32)         # [Q, N]
+
+    da = dt * a                                 # [Q] log-decay
+    cs = jnp.cumsum(da)                         # [Q]
+    Q = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    m = cb * L * dt[None, :]
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q,hd]
+
+    h_prev = h_ref[...]                          # [hd, N]
+    y += (cm * jnp.exp(cs)[:, None]) @ h_prev.T
+
+    decay_out = jnp.exp(cs[-1] - cs) * dt        # [Q]
+    h_ref[...] = (h_prev * jnp.exp(cs[-1])
+                  + jax.lax.dot_general(
+                      x * decay_out[:, None], bm,
+                      (((0,), (0,)), ((), ())),
+                      preferred_element_type=jnp.float32))        # [hd,N]
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        h_out_ref[...] = h_ref[...]
+
+
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 256,
+                    interpret: bool = True
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, nh, S, hd]; dt: [B, nh, S]; A: [nh]; Bm/Cm: [B, S, N]
+    (single B/C group broadcast over heads, as in Mamba-2).
+    Returns (y [B, nh, S, hd], h_final [B, nh, hd, N])."""
+    B, nh, S, hd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kern = functools.partial(_kernel, n_chunks=nc)
+    y, h_fin = pl.pallas_call(
+        kern,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((None, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, hd, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, S, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, h_fin

@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes, print memory/cost analysis, and emit the
+roofline terms consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cells, get_config, get_shape
+from repro.configs.base import RunConfig
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import pspec
+from repro.runtime.steps import lower_cell
+from repro.runtime.hlo_analysis import analyze_lowered
+from repro.runtime.roofline import roofline_report
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             run_overrides: dict | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    run = RunConfig(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                    **(run_overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with pspec.sharding_scope(mesh, run.sharding):
+        lowered, kind = lower_cell(cfg, run, shape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        hlo = analyze_lowered(lowered, compiled)
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_analysis": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "hlo": hlo,
+    }
+    rec["roofline"] = roofline_report(rec, cfg, shape)
+    if verbose:
+        dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+        print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']} ({kind}) "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print(f"  memory/device: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"total={dev_bytes/2**30:.2f}GiB")
+        r = rec["roofline"]
+        print(f"  roofline: compute={r['t_compute_s']:.3e}s "
+              f"memory={r['t_memory_s']:.3e}s coll={r['t_collective_s']:.3e}s "
+              f"-> bound={r['bound']} model/hlo_flops={r['useful_flops_ratio']:.3f}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--sharding", default=None)
+    ap.add_argument("--remat", default=None)
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for k in ("attn_impl", "sharding", "remat"):
+        v = getattr(args, k)
+        if v:
+            overrides[k] = v
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells(include_skips=True):
+            todo.append((arch, shape.name, skip))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cfgs = get_config(args.arch)
+        skip = None
+        if args.shape == "long_500k" and not cfgs.sub_quadratic:
+            skip = "skip:full-attn"
+        todo.append((args.arch, args.shape, skip))
+
+    results, failures = [], []
+    for arch, shape_name, skip in todo:
+        for mp in meshes:
+            if skip:
+                results.append({"arch": arch, "shape": shape_name,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "skipped": skip})
+                print(f"[dryrun] {arch} × {shape_name}: {skip}")
+                continue
+            try:
+                results.append(run_cell(arch, shape_name, multi_pod=mp,
+                                        run_overrides=overrides))
+            except Exception as e:  # noqa: BLE001 - report and continue
+                traceback.print_exc()
+                failures.append((arch, shape_name, mp, repr(e)))
+                results.append({"arch": arch, "shape": shape_name,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "error": repr(e)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.json}")
+    if failures:
+        print(f"FAILURES ({len(failures)}):")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print(f"dry-run OK: {len(results)} cells")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

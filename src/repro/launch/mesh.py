@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+    pure data parallelism whose gradient-sync traffic crosses the DCN and
+    is therefore the carbon-shiftable class (see DESIGN.md §2)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int = 0):
+    """Degenerate mesh over whatever devices exist (CPU tests/examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

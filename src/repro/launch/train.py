@@ -1,0 +1,67 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 [--full] [--no-carbon] [--faults] [--compression int8]
+
+Reduced configs run end-to-end on CPU; `--full` selects the exact assigned
+architecture (the same code path the dry-run lowers for the production
+meshes — on a real fleet the mesh comes from `launch.mesh` and the data/
+checkpoint endpoints from `cluster.topology`).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.configs.base import RunConfig
+from repro.runtime.train_loop import Trainer, TrainLoopConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--site", default="site_or")
+    ap.add_argument("--no-carbon", action="store_true")
+    ap.add_argument("--faults", action="store_true")
+    ap.add_argument("--compression", default="int8",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--attn-impl", default="blockwise",
+                    choices=["naive", "blockwise", "pallas"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_reduced(
+        args.arch, layers=4, d_model=128, vocab=1024)
+    run = RunConfig(arch=args.arch, attn_impl=args.attn_impl, remat="block",
+                    grad_compression=args.compression, lr=args.lr,
+                    warmup_steps=max(args.steps // 10, 5),
+                    total_steps=args.steps)
+    loop = TrainLoopConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every or max(args.steps // 5, 10),
+        ckpt_dir=args.ckpt_dir, site=args.site,
+        carbon_aware=not args.no_carbon, inject_faults=args.faults,
+        log_every=max(args.steps // 20, 5))
+    tr = Trainer(cfg, run, loop, batch_override=args.batch,
+                 seq_override=args.seq)
+    out = tr.run_steps()
+    print(f"final loss {out['final_loss']:.4f} | "
+          f"{out['emissions_kg']:.2f} kgCO2 | DCN {out['dcn_gb']:.3f} GB | "
+          f"{len(out['events'])} events")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

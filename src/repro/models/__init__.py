@@ -1,0 +1,10 @@
+from repro.models.model import (decode_step, embed, input_specs, loss_fn,
+                                make_batch, prefill, unembed)
+from repro.models.params import (abstract_params, count_params, init_params,
+                                 param_logical_axes, param_shardings)
+
+__all__ = [
+    "decode_step", "embed", "input_specs", "loss_fn", "make_batch",
+    "prefill", "unembed", "abstract_params", "count_params", "init_params",
+    "param_logical_axes", "param_shardings",
+]

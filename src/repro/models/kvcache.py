@@ -1,0 +1,99 @@
+"""Decode caches.
+
+Attention sub-layers use either a full-length cache [B, S_max, nkv, h] or a
+ring buffer [B, W, nkv, h] for sliding-window layers; keys are stored
+post-RoPE, so slot validity/positions are derived from the scalar step
+counter (no per-slot position storage). SSM sub-layers carry an SSMState.
+The cache tree mirrors the block structure and is stacked over scan groups.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.models.ssm import init_ssm_state
+
+
+def ring_positions(cur: jax.Array, size: int, window: bool) -> jax.Array:
+    """Absolute positions stored in each cache slot, -1 where empty.
+    cur = number of tokens already written."""
+    i = jnp.arange(size)
+    if not window:
+        return jnp.where(i < cur, i, -1)
+    last = cur - 1
+    p = last - jnp.remainder(last - i, size)
+    return jnp.where((i < cur) & (p >= 0), p, -1)
+
+
+def cache_sizes(cfg: ModelConfig, spec: P.SubLayerSpec, s_max: int) -> int:
+    if spec.is_global or cfg.sliding_window is None:
+        return s_max
+    return min(cfg.sliding_window, s_max)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   enc_len: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the decode cache (dry-run)."""
+    def mk(shape, dtype=None):
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype or cfg.dtype))
+
+    g = P.n_groups(cfg)
+    nkv, h = cfg.n_kv_heads, cfg.head_dim
+    tree: Dict[str, Any] = {}
+    for spec in P.block_specs(cfg):
+        sub: Dict[str, Any] = {}
+        if spec.mixer == "attn":
+            sz = cache_sizes(cfg, spec, s_max)
+            sub["k"] = mk((g, batch, sz, nkv, h))
+            sub["v"] = mk((g, batch, sz, nkv, h))
+        else:
+            s = cfg.ssm
+            d_in = s.d_inner(cfg.d_model)
+            conv_ch = d_in + 2 * s.n_groups * s.d_state
+            sub["conv"] = mk((g, batch, s.conv_width - 1, conv_ch))
+            sub["h"] = mk((g, batch, s.n_heads(cfg.d_model), s.headdim,
+                           s.d_state), jnp.float32)
+        if cfg.encoder_layers:
+            sub["xk"] = mk((g, batch, enc_len, nkv, h))
+            sub["xv"] = mk((g, batch, enc_len, nkv, h))
+        tree[f"sub{spec.index}"] = sub
+    return tree
+
+
+def zero_cache(cfg: ModelConfig, batch: int, s_max: int,
+               enc_len: int = 0) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, s_max, enc_len))
+
+
+def cache_logical_axes(cfg: ModelConfig, seq_shard: bool) -> Dict[str, Any]:
+    """Logical sharding axes per cache leaf. seq_shard=True shards the KV
+    sequence dim over 'data' (long-context batch=1 decode). When the KV-head
+    count does not divide the model axis, the sequence dim takes the model
+    axis instead (replicating a 32k cache would dominate HBM)."""
+    from repro.runtime import pspec
+    kv_divides = (cfg.n_kv_heads % max(pspec.logical_axis_size("kv_heads"), 1)
+                  == 0)
+    kv_ax = "kv_heads" if kv_divides else None
+    seq_ax: Any = "seq_shard" if seq_shard else None
+    if not kv_divides:
+        seq_ax = ("seq_shard", "seq_model") if seq_shard else "seq_model"
+    tree: Dict[str, Any] = {}
+    for spec in P.block_specs(cfg):
+        sub: Dict[str, Any] = {}
+        if spec.mixer == "attn":
+            sub["k"] = (None, "batch", seq_ax, kv_ax, None)
+            sub["v"] = (None, "batch", seq_ax, kv_ax, None)
+        else:
+            sub["conv"] = (None, "batch", None, "ssm_inner")
+            sub["h"] = (None, "batch", "ssm_inner", None, None)
+        if cfg.encoder_layers:
+            sub["xk"] = (None, "batch", None, "kv_heads", None)
+            sub["xv"] = (None, "batch", None, "kv_heads", None)
+        tree[f"sub{spec.index}"] = sub
+    return tree

@@ -1,0 +1,194 @@
+"""Model-level API: embedding, losses, train/prefill/decode steps, and
+``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run).
+
+Batch layouts per shape kind:
+  train:   {tokens [B,S_txt], targets [B,S_txt], (+frontend)}
+  prefill: {tokens [B,S_txt], (+frontend)}            -> (last_logits, cache)
+  decode:  {token [B,1], cache, cur}                  -> (logits, cache)
+
+Frontend stubs (per the brief): 'audio' supplies encoder frames
+[B, S//4, d_model]; 'vision' supplies patch embeddings [B, 256, d_model]
+prepended to the text sequence (text length = S - 256).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import kvcache as KC
+from repro.models import params as P
+from repro.models.layers import rms_norm
+from repro.models.transformer import run_decoder, run_encoder
+from repro.runtime.pspec import logical_constraint
+
+AUDIO_DOWNSAMPLE = 4  # audio frontend emits one frame per 4 target positions
+
+
+# ------------------------------------------------------------- embeddings --
+def embed(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+          frontend: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    if cfg.family == "vlm" and frontend is not None:
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return logical_constraint(x, ("batch", None, None))
+
+
+def unembed(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = (params["embed"]["tok"].T if cfg.tie_embeddings
+         else params["lm_head"])
+    logits = x @ w.astype(x.dtype)
+    return logical_constraint(logits, ("batch", None, "vocab"))
+
+
+# ------------------------------------------------------------------ loss ---
+def chunked_xent(params: Dict, cfg: ModelConfig, x: jax.Array,
+                 targets: jax.Array, chunk: int = 0
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over next-token targets; optionally chunked over the
+    sequence so [B, chunk, V] logits are never all live at once.
+    Returns (sum_nll, n_tokens)."""
+    B, S, _ = x.shape
+    if chunk <= 0 or S % chunk != 0 or S == chunk:
+        logits = unembed(params, cfg, x).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold), jnp.asarray(B * S, jnp.float32)
+
+    nch = S // chunk
+    xc = x.reshape(B, nch, chunk, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        xs, ts = inp
+        logits = unembed(params, cfg, xs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    # remat: never keep more than one chunk of logits live (fwd or bwd)
+    body = jax.checkpoint(body, prevent_cse=False)
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    return tot, jnp.asarray(B * S, jnp.float32)
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, run: RunConfig,
+            batch: Dict[str, jax.Array], *, xent_chunk: int = 2048
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = run_encoder(params, cfg, run, batch["frames"].astype(cfg.dtype))
+    x = embed(params, cfg, tokens, batch.get("patches"))
+    x, _, aux = run_decoder(params, cfg, run, x, mode="train",
+                            enc_out=enc_out)
+    targets = batch["targets"]
+    if cfg.family == "vlm":
+        # frontend positions are not scored; score text region only
+        x = x[:, cfg.n_frontend_tokens:, :]
+    nll_sum, denom = chunked_xent(params, cfg, x, targets, xent_chunk)
+    loss = nll_sum / denom
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss, {"nll": nll_sum / denom, "aux": aux}
+
+
+# ------------------------------------------------------------- serving -----
+def prefill(params: Dict, cfg: ModelConfig, run: RunConfig,
+            batch: Dict[str, jax.Array], s_max: int
+            ) -> Tuple[jax.Array, Dict]:
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    enc_out = None
+    enc_len = 0
+    if cfg.family == "encdec":
+        enc_out = run_encoder(params, cfg, run, batch["frames"].astype(cfg.dtype))
+        enc_len = enc_out.shape[1]
+    cache = KC.zero_cache(cfg, B, s_max, enc_len)
+    x = embed(params, cfg, tokens, batch.get("patches"))
+    x, cache, _ = run_decoder(params, cfg, run, x, mode="prefill",
+                              cache=cache, enc_out=enc_out)
+    logits = unembed(params, cfg, x[:, -1:, :])[:, 0]
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, run: RunConfig,
+                token: jax.Array, cache: Dict, cur: jax.Array
+                ) -> Tuple[jax.Array, Dict]:
+    """token [B,1] int32; cur = number of tokens already in the cache."""
+    x = embed(params, cfg, token)
+    x, cache, _ = run_decoder(params, cfg, run, x, mode="decode",
+                              cache=cache, cur=cur)
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits.astype(jnp.float32), cache
+
+
+# ------------------------------------------------------------ input specs --
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.dtype(jnp.int32)
+    f32 = jnp.dtype(jnp.float32)
+    d = cfg.d_model
+    stl = text_len(cfg, S)
+
+    if shape.kind == "train":
+        spec: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, stl), i32),
+            "targets": jax.ShapeDtypeStruct((B, stl), i32),
+        }
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct((B, S // AUDIO_DOWNSAMPLE, d), f32)
+        if cfg.family == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct((B, cfg.n_frontend_tokens, d), f32)
+            spec["targets"] = jax.ShapeDtypeStruct((B, stl), i32)
+        return spec
+
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, stl), i32)}
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct((B, S // AUDIO_DOWNSAMPLE, d), f32)
+        if cfg.family == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct((B, cfg.n_frontend_tokens, d), f32)
+        return spec
+
+    # decode: one new token against an S-token cache
+    enc_len = S // AUDIO_DOWNSAMPLE if cfg.family == "encdec" else 0
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": KC.abstract_cache(cfg, B, S, enc_len),
+        "cur": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_batch(rng: jax.Array, cfg: ModelConfig, shape: ShapeConfig,
+               batch_override: int = 0) -> Dict[str, jax.Array]:
+    """Random realization of input_specs (smoke tests / examples)."""
+    spec = input_specs(cfg, shape)
+    if batch_override:
+        spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((batch_override,) + s.shape[1:],
+                                           s.dtype)
+            if s.shape and s.shape[0] == shape.global_batch else s, spec)
+    keys = jax.random.split(rng, len(jax.tree.leaves(spec)))
+    flat, treedef = jax.tree.flatten(spec)
+    out = []
+    for s, k in zip(flat, keys):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if s.shape == ():
+                out.append(jnp.zeros((), s.dtype))
+            else:
+                out.append(jax.random.randint(k, s.shape, 0,
+                                              min(cfg.vocab_size, 255), s.dtype))
+        else:
+            out.append(jax.random.normal(k, s.shape, s.dtype) * 0.02)
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,197 @@
+"""Mamba-2 / SSD (state-space duality) block, arXiv:2405.21060.
+
+Training path: the chunked SSD algorithm — within-chunk "attention-like"
+quadratic term + cross-chunk linear state recurrence (lax.scan over chunks).
+Decode path: O(1) recurrent state update per token.
+
+Layout: x [B, S, nh, hd]; B/C [B, S, G, N]; dt [B, S, nh]; state [B, nh, hd, N].
+The depthwise causal conv (width w) is expressed as w shifted adds — no
+conv HLO, which keeps the roofline analyzer exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import rms_norm
+from repro.runtime.pspec import logical_constraint
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, w-1, conv_channels] rolling input window
+    h: jax.Array      # [B, nh, hd, N]
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifts. x: [B,S,C], w: [width, C]."""
+    width = w.shape[0]
+    out = x * w[-1][None, None, :]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[-1 - i][None, None, :]
+    return out
+
+
+def _segsum_decay(dt_a: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """dt_a: [..., Q, nh] per-step log decay. Returns (cumsum [...,Q,nh],
+    within-chunk decay matrix L [..., nh, Q, Q] with L[i,j]=exp(cs_i - cs_j),
+    lower-triangular inclusive)."""
+    cs = jnp.cumsum(dt_a, axis=-2)                      # [..., Q, nh]
+    diff = cs[..., :, None, :] - cs[..., None, :, :]    # [..., Qi, Qj, nh]
+    Q = dt_a.shape[-2]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[..., None], jnp.exp(diff), 0.0)
+    return cs, L
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  [B, S, nh, hd]; dt: [B, S, nh] (post-softplus, >0)
+    A:  [nh] (negative);  Bm/Cm: [B, S, G, N]
+    Returns (y [B, S, nh, hd], h_final [B, nh, hd, N]).
+    """
+    Bsz, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} not divisible by chunk {chunk}"
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, nh, hd).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, nh).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+
+    dt_a = dtc * A.astype(f32)[None, None, None, :]          # log decay <= 0
+    cs, L = _segsum_decay(dt_a)                              # cs:[B,nc,Q,nh] L:[B,nc,Qi,Qj,nh]
+    total = cs[:, :, -1, :]                                  # [B,nc,nh]
+
+    # ---- within-chunk (quadratic) term ----
+    CB = jnp.einsum("bcigN,bcjgN->bcgij", Cc, Bc)            # [B,nc,G,Q,Q]
+    CB = jnp.repeat(CB, rep, axis=2)                         # [B,nc,nh,Q,Q]
+    M = CB * L.transpose(0, 1, 4, 2, 3)                      # decay
+    M = M * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]      # dt_j weight
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xc)
+
+    # ---- chunk state contributions ----
+    # S_c[b,h,p,n] = sum_j exp(total - cs_j) * dt_j * x_j ⊗ B_j
+    decay_out = jnp.exp(total[:, :, None, :] - cs)           # [B,nc,Q,nh]
+    w = decay_out * dtc                                      # [B,nc,Q,nh]
+    Bh = jnp.repeat(Bc, rep, axis=3)                         # [B,nc,Q,nh,N]
+    Sc = jnp.einsum("bcjh,bcjhp,bcjhn->bchpn", w, xc, Bh)
+
+    # ---- cross-chunk recurrence ----
+    h_init = (jnp.zeros((Bsz, nh, hd, N), f32) if h0 is None
+              else h0.astype(f32))
+
+    def step(h, inputs):
+        s_c, tot_c = inputs                                  # [B,nh,hd,N], [B,nh]
+        h_next = h * jnp.exp(tot_c)[:, :, None, None] + s_c
+        return h_next, h                                     # emit h_prev
+
+    h_fin, h_prevs = lax.scan(
+        step, h_init,
+        (Sc.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # [B,nc,nh,hd,N]
+
+    # ---- inter-chunk output term ----
+    Ch = jnp.repeat(Cc, rep, axis=3)                         # [B,nc,Q,nh,N]
+    decay_in = jnp.exp(cs)                                   # [B,nc,Q,nh]
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, h_prevs, decay_in)
+
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hd)
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x:[B,nh,hd] dt:[B,nh] Bm/Cm:[B,G,N]
+    h:[B,nh,hd,N] -> (y [B,nh,hd], h_next)."""
+    f32 = jnp.float32
+    nh, G = x.shape[1], Bm.shape[1]
+    rep = nh // G
+    da = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])    # [B,nh]
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=1)             # [B,nh,N]
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=1)
+    inc = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(f32), x.astype(f32), Bh)
+    h_next = h * da[:, :, None, None] + inc
+    y = jnp.einsum("bhpn,bhn->bhp", h_next, Ch)
+    return y.astype(x.dtype), h_next
+
+
+# ------------------------------------------------------------- the block ---
+def mamba_block(params, x: jax.Array, cfg: SSMConfig, *,
+                state: Optional[SSMState] = None, norm_eps: float = 1e-6,
+                use_kernel: bool = False
+                ) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full Mamba-2 block. x: [B, S, d_model] (S=1 decode when state given).
+
+    params: in_proj [d, 2*d_in + 2*G*N + nh], conv [w, d_in + 2GN],
+            A_log/D/dt_bias [nh], gate_norm [d_in], out_proj [d_in, d].
+    """
+    B, S, d = x.shape
+    d_in = cfg.d_inner(d)
+    nh = cfg.n_heads(d)
+    G, N, hd, w = cfg.n_groups, cfg.d_state, cfg.headdim, cfg.conv_width
+    conv_ch = d_in + 2 * G * N
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if state is None:
+        xBC = jax.nn.silu(_causal_conv(xBC, params["conv"].astype(x.dtype)))
+        new_conv = None
+    else:
+        window = jnp.concatenate([state.conv, xBC], axis=1)   # [B, w, C]
+        conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                              params["conv"].astype(jnp.float32))
+        xBC = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+        new_conv = window[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, S, nh, hd)
+    xs = logical_constraint(xs, ("batch", None, "heads", None))
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    if state is None:
+        if use_kernel:
+            from repro.kernels.ops import ssd_scan as _ssd_kernel
+            y, h_fin = _ssd_kernel(xs, dt, A, Bm, Cm, chunk=cfg.chunk_size)
+        else:
+            y, h_fin = ssd_chunked(xs, dt, A, Bm, Cm, cfg.chunk_size)
+        new_state = None
+    else:
+        y1, h_next = ssd_decode_step(
+            state.h, xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y1[:, None]
+        new_state = SSMState(conv=new_conv, h=h_next)
+
+    y = y + xs * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.bfloat16) -> SSMState:
+    d_in = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    conv_ch = d_in + 2 * cfg.n_groups * cfg.d_state
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        h=jnp.zeros((batch, nh, cfg.headdim, cfg.d_state), jnp.float32),
+    )

@@ -1,0 +1,280 @@
+"""Decoder/encoder stacks for all 10 assigned architectures.
+
+The layer stack is organized as `n_groups` repetitions of a `period`-long
+block pattern (attention/SSM × dense-FFN/MoE × local/global), scanned with
+stacked parameters so HLO size and compile time stay bounded at 61-layer /
+1T-parameter scale. One code path serves train, prefill, and decode — the
+mode only changes positions, masking source, and cache handling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import params as P
+from repro.models import kvcache as KC
+from repro.models.layers import (apply_rope, attention,
+                                 attention_projections, ffn, rms_norm)
+from repro.models.moe import moe_ffn
+from repro.models.ssm import SSMState, mamba_block
+from repro.runtime.pspec import logical_constraint
+
+
+# ------------------------------------------------------------- sublayers ---
+def _attn_sublayer(cfg: ModelConfig, run: RunConfig, spec: P.SubLayerSpec,
+                   p: Dict, x: jax.Array, *, mode: str, cur,
+                   cache: Optional[Dict]) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v = attention_projections(
+        p, h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim)
+    window = None if spec.is_global else cfg.sliding_window
+    use_rope = cfg.rope_theta > 0
+
+    if mode in ("train", "prefill"):
+        pos = jnp.arange(S)
+        if use_rope:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        from repro.models.layers import seq_parallel_attention, use_seq_parallel
+        if use_seq_parallel(q, k):
+            # context parallelism: heads don't divide the model axis
+            out = seq_parallel_attention(q, k, v, causal=True, window=window,
+                                         impl=run.attn_impl,
+                                         block_kv=run.attn_block_kv)
+        else:
+            q = logical_constraint(q, ("batch", None, "heads", None))
+            k = logical_constraint(k, ("batch", None, "kv_heads", None))
+            out = attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                            window=window, impl=run.attn_impl,
+                            block_kv=run.attn_block_kv)
+        new_cache = None
+        if mode == "prefill":
+            sz = cache["k"].shape[1]
+            if S >= sz:
+                ks, vs = k[:, S - sz:], v[:, S - sz:]
+                if sz < S or (window is not None and sz == window):
+                    roll = S % sz
+                    ks = jnp.roll(ks, roll, axis=1)
+                    vs = jnp.roll(vs, roll, axis=1)
+            else:
+                padw = ((0, 0), (0, sz - S), (0, 0), (0, 0))
+                ks, vs = jnp.pad(k, padw), jnp.pad(v, padw)
+            new_cache = dict(cache, k=ks.astype(cache["k"].dtype),
+                             v=vs.astype(cache["v"].dtype))
+    else:  # decode: S == 1
+        pos_q = jnp.full((1,), cur)
+        if use_rope:
+            q = apply_rope(q, pos_q, cfg.rope_theta)
+            k = apply_rope(k, pos_q, cfg.rope_theta)
+        sz = cache["k"].shape[1]
+        is_ring = window is not None and sz <= window
+        slot = jnp.remainder(cur, sz) if is_ring else jnp.minimum(cur, sz - 1)
+        ck = lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        kv_pos = KC.ring_positions(cur + 1, sz, window=is_ring)
+        out = attention(q, ck, cv, q_pos=pos_q, kv_pos=kv_pos, causal=True,
+                        window=window, impl="naive")
+        new_cache = dict(cache, k=ck, v=cv)
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def _cross_sublayer(cfg: ModelConfig, p: Dict, x: jax.Array, *, mode: str,
+                    enc_out: Optional[jax.Array],
+                    cache: Optional[Dict]) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, _ = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"].astype(x.dtype)).reshape(B, S, nq, hd)
+    new_cache = cache
+    if mode == "decode":
+        k, v = cache["xk"], cache["xv"]
+    else:
+        kv = enc_out @ p["wkv"].astype(x.dtype)
+        k, v = jnp.split(kv, 2, axis=-1)
+        k = k.reshape(B, -1, nkv, hd)
+        v = v.reshape(B, -1, nkv, hd)
+        if mode == "prefill":
+            new_cache = dict(cache, xk=k.astype(cache["xk"].dtype),
+                             xv=v.astype(cache["xv"].dtype))
+    S_enc = k.shape[1]
+    out = attention(q, k, v, q_pos=jnp.zeros((S,), jnp.int32),
+                    kv_pos=jnp.arange(S_enc), causal=False, impl="naive")
+    out = out.reshape(B, S, nq * hd)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def _ffn_sublayer(cfg: ModelConfig, spec: P.SubLayerSpec, p: Dict,
+                  x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if spec.is_moe:
+        y, aux = moe_ffn(p, h, cfg.moe, gated=cfg.ffn_gated,
+                         d_ff_dense=cfg.d_ff)
+        return y, aux
+    y = ffn(p, h, gated=cfg.ffn_gated)
+    return y, jnp.zeros((), jnp.float32)
+
+
+def _ssm_sublayer(cfg: ModelConfig, run: RunConfig, p: Dict, x: jax.Array, *,
+                  mode: str, cache: Optional[Dict]
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    state = None
+    if mode == "decode":
+        state = SSMState(conv=cache["conv"], h=cache["h"])
+    out, new_state = mamba_block(
+        p, h, cfg.ssm, state=state, norm_eps=cfg.norm_eps,
+        use_kernel=(run.attn_impl == "pallas"))
+    new_cache = cache
+    if mode == "decode":
+        new_cache = dict(cache, conv=new_state.conv.astype(cache["conv"].dtype),
+                         h=new_state.h)
+    # (mode == "prefill" is handled by _ssm_prefill in _apply_group)
+    return out, new_cache
+
+
+def _ssm_prefill(cfg: ModelConfig, run: RunConfig, p: Dict, x: jax.Array,
+                 cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Prefill for SSM layers: full-seq mix + capture final recurrent state."""
+    from repro.models.ssm import _causal_conv, ssd_chunked  # noqa
+    import jax.nn as jnn
+    B, S, d = x.shape
+    s = cfg.ssm
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    G, N = s.n_groups, s.d_state
+    conv_ch = d_in + 2 * G * N
+    zxbcdt = h_in @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+    dt = jnn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    conv_tail = xBC[:, -(s.conv_width - 1):, :]
+    xBC = jnn.silu(_causal_conv(xBC, p["conv"].astype(x.dtype)))
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, S, nh, s.headdim)
+    Bm, Cm = Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N)
+    y, h_fin = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size)
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jnn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = dict(cache, conv=conv_tail.astype(cache["conv"].dtype),
+                     h=h_fin)
+    return out, new_cache
+
+
+# ------------------------------------------------------------ the groups ---
+def _apply_group(cfg: ModelConfig, run: RunConfig, x: jax.Array,
+                 p_group: Dict, cache_group: Optional[Dict], *, mode: str,
+                 cur, enc_out: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    for spec in P.block_specs(cfg):
+        p_sub = p_group[f"sub{spec.index}"]
+        c_sub = None if cache_group is None else cache_group[f"sub{spec.index}"]
+        c_new = c_sub
+        if spec.mixer == "attn":
+            out, c_attn = _attn_sublayer(cfg, run, spec, p_sub["attn"], x,
+                                         mode=mode, cur=cur, cache=c_sub)
+            if c_attn is not None:
+                c_new = dict(c_sub, **{k: c_attn[k] for k in ("k", "v")})
+            x = x + out
+        else:
+            if mode == "prefill":
+                out, c_new = _ssm_prefill(cfg, run, p_sub["ssm"], x, c_sub)
+            else:
+                out, c_new = _ssm_sublayer(cfg, run, p_sub["ssm"], x,
+                                           mode=mode, cache=c_sub)
+            x = x + out
+        if cfg.encoder_layers:
+            out, c_new2 = _cross_sublayer(cfg, p_sub["cross"], x, mode=mode,
+                                          enc_out=enc_out,
+                                          cache=c_new if c_new is not None else c_sub)
+            if c_new2 is not None:
+                c_new = c_new2
+            x = x + out
+        if spec.has_ffn:
+            key = "moe" if spec.is_moe else "ffn"
+            out, aux_l = _ffn_sublayer(cfg, spec, p_sub[key], x)
+            x = x + out
+            aux = aux + aux_l
+        x = logical_constraint(x, ("batch", None, None))
+        if c_new is not None:
+            new_cache[f"sub{spec.index}"] = c_new
+    return x, (new_cache if cache_group is not None else None), aux
+
+
+def run_decoder(params: Dict, cfg: ModelConfig, run: RunConfig, x: jax.Array,
+                *, mode: str, cache: Optional[Dict] = None, cur=None,
+                enc_out: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """x: [B, S, d] -> (y, new_cache, aux_loss)."""
+    blocks = params["decoder"]["blocks"]
+
+    def group_fn(x, p_group, cache_group):
+        return _apply_group(cfg, run, x, p_group, cache_group,
+                            mode=mode, cur=cur, enc_out=enc_out)
+
+    if run.remat != "none":
+        # prevent_cse=False: we are inside lax.scan, where the CSE-prevention
+        # barriers are unnecessary and defeat loop-invariant hoisting.
+        group_fn = jax.checkpoint(group_fn, prevent_cse=False)
+
+    if cache is None:
+        def body(carry, p_group):
+            x, aux = carry
+            x, _, aux_g = group_fn(x, p_group, None)
+            return (x, aux + aux_g), None
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+        new_cache = None
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            p_group, cache_group = xs
+            x, c_new, aux_g = group_fn(x, p_group, cache_group)
+            return (x, aux + aux_g), c_new
+        (x, aux), new_cache = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (blocks, cache))
+    x = rms_norm(x, params["decoder"]["norm"], cfg.norm_eps)
+    return x, new_cache, aux
+
+
+def run_encoder(params: Dict, cfg: ModelConfig, run: RunConfig,
+                frames: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frontend frames [B, S, d]."""
+    blocks = params["encoder"]["blocks"]
+
+    def body(x, p):
+        h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+        q, k, v = attention_projections(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim)
+        S = x.shape[1]
+        pos = jnp.arange(S)
+        if cfg.rope_theta > 0:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        out = attention(q, k, v, q_pos=pos, kv_pos=pos, causal=False,
+                        impl=run.attn_impl, block_kv=run.attn_block_kv)
+        out = out.reshape(x.shape[0], S, cfg.n_heads * cfg.head_dim)
+        x = x + out @ p["attn"]["wo"].astype(x.dtype)
+        h = rms_norm(x, p["ffn"]["ln"], cfg.norm_eps)
+        x = x + ffn(p["ffn"], h, gated=cfg.ffn_gated)
+        return x, None
+
+    if run.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, frames, blocks)
+    return rms_norm(x, params["encoder"]["norm"], cfg.norm_eps)

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptState
+from repro.optim.schedule import lr_schedule
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "lr_schedule"]

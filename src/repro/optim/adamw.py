@@ -1,0 +1,79 @@
+"""AdamW with fp32 master weights over (possibly bf16) parameters.
+
+Optimizer state shards exactly like the parameters (ZeRO-style: the same
+logical axes apply, so m/v/master inherit the param NamedShardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array      # i32 scalar
+    master: Any          # fp32 copy of params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def abstract_opt_state(abstract_params) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        master=jax.tree.map(f32, abstract_params),
+        m=jax.tree.map(f32, abstract_params),
+        v=jax.tree.map(f32, abstract_params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt: OptState, params, *, lr, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """Returns (new_params_in_model_dtype, new_opt_state, metrics)."""
+    step = opt.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(grad_clip > 0,
+                      jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)), 1.0)
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = weight_decay if w.ndim >= 2 else 0.0
+        w = w - lr * (mh / (jnp.sqrt(vh) + eps) + wd * w)
+        return m, v, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    flat_w = jax.tree.leaves(opt.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_w = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), new_w, params)
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_params, OptState(step, new_w, new_m, new_v), metrics

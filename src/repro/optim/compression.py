@@ -1,0 +1,101 @@
+"""Gradient/delta compression for the cross-pod (DCN) sync — the traffic
+class the paper's scheduler governs. int8 quantization (~4× fewer bytes)
+and top-k sparsification with error feedback (~1/k_frac fewer bytes).
+Compression composes with time shifting: fewer bytes AND greener bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- int8 ----
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ----------------------------------------------------------------- top-k ---
+def compress_topk(x: jax.Array, k_frac: float
+                  ) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    k = max(int(flat.shape[0] * k_frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx
+
+
+def decompress_topk(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), vals.dtype)
+    return flat.at[idx].set(vals).reshape(shape)
+
+
+# ------------------------------------------------------------- tree-level --
+@dataclasses.dataclass
+class CompressionState:
+    """Error-feedback residuals (one per leaf) for top-k."""
+    residual: Any
+
+
+def init_compression_state(tree) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree))
+
+
+def compress_tree(tree, scheme: str, *, k_frac: float = 0.01,
+                  state: Optional[CompressionState] = None):
+    """Returns (payload, new_state, bytes_on_wire)."""
+    if scheme == "none":
+        n = sum(x.size * 4 for x in jax.tree.leaves(tree))
+        return tree, state, n
+
+    if scheme == "int8":
+        out = jax.tree.map(lambda x: quantize_int8(x.astype(jnp.float32)),
+                           tree)
+        n = sum(x.size * 1 + 4 for x in jax.tree.leaves(tree))
+        return out, state, n
+
+    if scheme == "topk":
+        assert state is not None, "topk needs error-feedback state"
+        payload = {}
+        new_res = {}
+        flat, treedef = jax.tree.flatten(tree)
+        res_flat = jax.tree.leaves(state.residual)
+        payload_list, res_list, n = [], [], 0
+        for x, r in zip(flat, res_flat):
+            xe = x.astype(jnp.float32) + r
+            vals, idx = compress_topk(xe, k_frac)
+            rec = decompress_topk(vals, idx, xe.shape)
+            res_list.append(xe - rec)          # error feedback
+            payload_list.append((vals, idx, xe.shape))
+            n += int(vals.size) * 8            # 4B value + 4B index
+        return ((treedef, payload_list),
+                CompressionState(jax.tree.unflatten(treedef, res_list)), n)
+
+    raise ValueError(scheme)
+
+
+def decompress_tree(payload, scheme: str):
+    if scheme == "none":
+        return payload
+    if scheme == "int8":
+        return jax.tree.map(lambda qs: dequantize_int8(*qs), payload,
+                            is_leaf=lambda t: isinstance(t, tuple)
+                            and len(t) == 2 and hasattr(t[0], "dtype"))
+    if scheme == "topk":
+        treedef, payload_list = payload
+        leaves = [decompress_topk(v, i, s) for (v, i, s) in payload_list]
+        return jax.tree.unflatten(treedef, leaves)
+    raise ValueError(scheme)
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

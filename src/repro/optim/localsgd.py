@@ -1,0 +1,83 @@
+"""Carbon-adaptive local SGD (DiLoCo-style) for the cross-pod axis.
+
+Each pod optimizes locally; every H steps the pods exchange parameter
+deltas over the DCN and apply an outer update. The paper's time-shifting
+lever applied to gradient traffic: H stretches when the current carbon
+intensity is high (dirty hours → fewer, compressed syncs) and shrinks when
+green. Divergence is bounded by H_max; the outer momentum keeps the
+trajectory close to synchronous SGD (Douillard et al., DiLoCo).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import (CompressionState, compress_tree,
+                                     decompress_tree, tree_bytes)
+
+
+@dataclasses.dataclass
+class CarbonSyncController:
+    """Maps current CI → sync period H ∈ [h_min, h_max], linear in CI
+    between the green/dirty thresholds."""
+    h_min: int = 1
+    h_max: int = 16
+    ci_green: float = 250.0
+    ci_dirty: float = 450.0
+
+    def period(self, ci: float) -> int:
+        if ci <= self.ci_green:
+            return self.h_min
+        if ci >= self.ci_dirty:
+            return self.h_max
+        f = (ci - self.ci_green) / (self.ci_dirty - self.ci_green)
+        return int(round(self.h_min + f * (self.h_max - self.h_min)))
+
+
+@dataclasses.dataclass
+class OuterOptState:
+    anchor: Any                    # params at last sync
+    momentum: Any
+    compression: Optional[CompressionState]
+
+
+def outer_init(params) -> OuterOptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OuterOptState(anchor=jax.tree.map(f32, params),
+                         momentum=jax.tree.map(zeros, params),
+                         compression=None)
+
+
+def pod_sync(pod_params: List[Any], outer: OuterOptState, *,
+             outer_lr: float = 0.7, outer_beta: float = 0.9,
+             scheme: str = "none", k_frac: float = 0.01
+             ) -> Tuple[List[Any], OuterOptState, int]:
+    """One cross-pod sync: average the per-pod deltas vs the anchor
+    (optionally compressed — this is the DCN payload), apply a Nesterov-ish
+    outer update, broadcast the result back. Returns (new per-pod params,
+    new outer state, wire bytes per pod)."""
+    n = len(pod_params)
+    deltas = [jax.tree.map(
+        lambda p, a: p.astype(jnp.float32) - a, pp, outer.anchor)
+        for pp in pod_params]
+
+    wire = 0
+    comp_state = outer.compression
+    sent = []
+    for d in deltas:
+        payload, comp_state, nbytes = compress_tree(
+            d, scheme, k_frac=k_frac, state=comp_state)
+        sent.append(decompress_tree(payload, scheme))
+        wire += nbytes
+    mean_delta = jax.tree.map(lambda *xs: sum(xs) / n, *sent)
+
+    mom = jax.tree.map(lambda m, d: outer_beta * m + d,
+                       outer.momentum, mean_delta)
+    anchor = jax.tree.map(lambda a, m: a + outer_lr * m, outer.anchor, mom)
+    new_params = [jax.tree.map(lambda a, p: a.astype(p.dtype), anchor, pp)
+                  for pp in pod_params]
+    return new_params, OuterOptState(anchor, mom, comp_state), wire // n

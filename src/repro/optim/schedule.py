@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio * base_lr."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)

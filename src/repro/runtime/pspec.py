@@ -1,0 +1,170 @@
+"""Logical-axis sharding: model code names axes logically ('batch', 'heads',
+'expert', ...); a run-scoped rule table maps them to physical mesh axes.
+
+Outside a mesh scope (CPU smoke tests) every constraint is an identity, so
+model code never needs to know whether it is distributed.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+# physical axes referenced by rules must exist in the active mesh; entries
+# whose physical axes are absent degrade to None (replicated).
+DEFAULT_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "data",        # sequence-parallel KV for batch=1 long decode
+    "embed": None,
+    "fsdp": "data",             # parameter fully-sharded axis
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "capacity": "data",
+    "ssm_inner": "model",
+    "seq_model": "model",       # fallback: shard cache seq over 'model' when
+                                # kv_heads doesn't divide the model axis
+    "pod": "pod",
+}
+
+FSDP_RULES = dict(DEFAULT_RULES, heads=None, kv_heads=None, ffn=None,
+                  vocab=None, ssm_inner=None, expert="model")
+DP_RULES = {k: None for k in DEFAULT_RULES} | {"batch": ("pod", "data", "model")}
+
+RULE_SETS = {"2d": DEFAULT_RULES, "fsdp": FSDP_RULES, "dp": DP_RULES}
+
+
+def seq_attn_rules(base) -> Dict:
+    """Context-parallel attention layout: attention weights replicate over
+    'model' (q/k/v/o projections become pure-FSDP), activations shard the
+    sequence over 'model' inside the attention shard_map. Chosen per-cell
+    when the KV-head count would pad ≥2× on the model axis (see
+    models.layers.use_seq_parallel)."""
+    if isinstance(base, str):
+        base = RULE_SETS[base]
+    return dict(base, heads=None, kv_heads=None)
+
+
+class _Scope(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Union[str, Tuple[str, ...], None]] = DEFAULT_RULES
+
+
+_SCOPE = _Scope()
+
+
+@contextlib.contextmanager
+def sharding_scope(mesh: Optional[Mesh], rules: Union[str, Dict, None] = None):
+    """Activate a mesh + logical rule table for model code."""
+    prev = (_SCOPE.mesh, _SCOPE.rules)
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    _SCOPE.mesh = mesh
+    _SCOPE.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        if mesh is not None and not isinstance(
+                mesh, jax.sharding.AbstractMesh):
+            with mesh:
+                yield
+        else:  # None, or an AbstractMesh (resolve-only use)
+            yield
+    finally:
+        _SCOPE.mesh, _SCOPE.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _SCOPE.mesh
+
+
+def axis_size(physical: Union[str, Tuple[str, ...], None]) -> int:
+    """Product of mesh sizes of the given physical axes (1 if absent)."""
+    mesh = _SCOPE.mesh
+    if mesh is None or physical is None:
+        return 1
+    if isinstance(physical, str):
+        physical = (physical,)
+    n = 1
+    for a in physical:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def logical_axis_size(name: str) -> int:
+    return axis_size(_SCOPE.rules.get(name))
+
+
+def resolve(logical: Sequence[Logical],
+            shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names -> PartitionSpec under the active rules/mesh.
+
+    When ``shape`` is given, any mesh axis that does not evenly divide its
+    dimension is dropped (argument shardings must divide evenly; uneven dims
+    degrade to replication on that axis)."""
+    mesh = _SCOPE.mesh
+    axes_avail = set(mesh.axis_names) if mesh is not None else set()
+    mesh_shape = dict(mesh.shape) if mesh is not None else {}
+    out = []
+    used = set()
+
+    def phys(name, dim, cur):
+        if name is None:
+            return (), cur
+        mapped = _SCOPE.rules.get(name, None)
+        if mapped is None:
+            return (), cur
+        if isinstance(mapped, str):
+            mapped = (mapped,)
+        got = []
+        for a in mapped:
+            if a not in axes_avail or a in used:
+                continue
+            if dim is not None and dim % (cur * mesh_shape[a]) != 0:
+                continue
+            got.append(a)
+            cur *= mesh_shape[a]
+            used.add(a)
+        return tuple(got), cur
+
+    for i, item in enumerate(logical):
+        dim = shape[i] if shape is not None else None
+        subs = item if isinstance(item, tuple) else (item,)
+        parts = []
+        cur = 1
+        for sub in subs:
+            got, cur = phys(sub, dim, cur)
+            parts.extend(got)
+        if not parts:
+            out.append(None)
+        elif len(parts) == 1:
+            out.append(parts[0])
+        else:
+            out.append(tuple(parts))
+    return P(*out)
+
+
+def logical_constraint(x: jax.Array, logical: Sequence[Logical]) -> jax.Array:
+    """with_sharding_constraint by logical names; identity outside a mesh."""
+    mesh = _SCOPE.mesh
+    if mesh is None:
+        return x
+    spec = resolve(logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical: Sequence[Logical],
+                   shape: Optional[Sequence[int]] = None
+                   ) -> Optional[NamedSharding]:
+    mesh = _SCOPE.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(logical, shape=shape))

@@ -1,0 +1,68 @@
+"""Roofline terms for TPU v5e from the dry-run's compiled artifact.
+
+  compute    t = FLOPs_per_chip / 197 TFLOP/s (bf16)
+  memory     t = HBM_bytes_per_chip / 819 GB/s
+  collective t = collective_wire_bytes_per_chip / 50 GB/s (ICI, per link)
+
+FLOPs/bytes come from ``runtime.hlo_analysis`` (trip-count-corrected; raw
+``cost_analysis`` numbers are also recorded for reference). MODEL_FLOPS is
+the analytic 6·N·D (train) / 2·N·D (inference) with N_active for MoE.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs (global, matmul-only 6ND/2ND convention)."""
+    pc = cfg.param_counts()
+    n_active = pc["active"]
+    # exclude embedding table from the per-token multiplier (standard 6ND
+    # counts use non-embedding params; the unembed matmul IS compute)
+    n_eff = n_active - cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_eff * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_eff * tokens
+    # decode: one token per sequence
+    return 2.0 * n_eff * shape.global_batch
+
+
+def roofline_report(rec: Dict, cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    hlo = rec["hlo"]
+    chips = rec["chips"]
+    flops_chip = hlo["dot_flops_per_chip"]
+    mem_chip = hlo["mem_bytes_per_chip"]
+    coll_chip = hlo["collective_total_per_chip"]
+
+    t_compute = flops_chip / PEAK_FLOPS
+    t_memory = mem_chip / HBM_BW
+    t_coll = coll_chip / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mf_chip = mf / chips
+    t_step = max(t_compute, t_memory, t_coll)
+    mfu = (mf_chip / PEAK_FLOPS) / t_step if t_step > 0 else 0.0
+
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bound": bound,
+        "model_flops_global": mf,
+        "hlo_flops_per_chip": flops_chip,
+        "useful_flops_ratio": (mf_chip / flops_chip) if flops_chip else 0.0,
+        "roofline_fraction": mfu,
+        "hbm_bytes_per_chip": mem_chip,
+        "collective_bytes_per_chip": coll_chip,
+    }

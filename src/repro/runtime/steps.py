@@ -1,0 +1,177 @@
+"""Builders for the jitted train / prefill / decode steps, with the
+sharding trees for every argument. All functions are mesh-agnostic: the
+shardings are resolved from the active ``sharding_scope``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as Psp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.models import kvcache as KC
+from repro.models import params as P
+from repro.optim.adamw import OptState, abstract_opt_state, adamw_init, adamw_update
+from repro.optim.schedule import lr_schedule
+from repro.runtime import pspec
+
+
+# ----------------------------------------------------------- sharding trees
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig):
+    spec = M.input_specs(cfg, shape)
+
+    def leaf(s):
+        if s.shape == ():
+            return pspec.named_sharding(())
+        ax = ("batch",) + (None,) * (len(s.shape) - 1)
+        return pspec.named_sharding(ax, shape=s.shape)
+
+    if shape.kind == "decode":
+        cache_axes = KC.cache_logical_axes(
+            cfg, seq_shard=(shape.global_batch == 1))
+        cache_abs = spec["cache"]
+        return {
+            "token": pspec.named_sharding(("batch", None),
+                                          shape=(shape.global_batch, 1)),
+            "cache": jax.tree.map(
+                lambda ax, s: pspec.named_sharding(ax, shape=s.shape),
+                cache_axes, cache_abs,
+                is_leaf=lambda t: isinstance(t, tuple)),
+            "cur": pspec.named_sharding(()),
+        }
+    return jax.tree.map(leaf, spec)
+
+
+def opt_shardings(cfg: ModelConfig, zero_pod: bool = True) -> OptState:
+    """Optimizer-state shardings. zero_pod=True additionally shards the
+    fp32 master/m/v over the 'pod' axis (ZeRO-1 across pods): params stay
+    pod-replicated (pure-DP fprop) while the 3× fp32 state divides by the
+    pod count — the difference between arctic-480b fitting v5e HBM or not.
+    XLA inserts the reduce-scatter/all-gather pair at the update."""
+    mesh = pspec.active_mesh()
+    if zero_pod and mesh is not None and "pod" in mesh.axis_names:
+        rules = dict(pspec._SCOPE.rules)
+        fsdp = rules.get("fsdp")
+        fsdp = (fsdp,) if isinstance(fsdp, str) else tuple(fsdp or ())
+        with pspec.sharding_scope(mesh, dict(rules, fsdp=("pod",) + fsdp)):
+            ps = P.param_shardings(cfg)
+    else:
+        ps = P.param_shardings(cfg)
+    return OptState(step=pspec.named_sharding(()), master=ps, m=ps, v=ps)
+
+
+# ------------------------------------------------------------ step builders
+def make_train_step(cfg: ModelConfig, run: RunConfig) -> Callable:
+    def train_step(params, opt: OptState, batch):
+        def lf(p):
+            return M.loss_fn(p, cfg, run, batch)
+
+        if run.microbatch and run.microbatch > 1:
+            n = run.microbatch
+            B = batch["tokens"].shape[0]
+            assert B % n == 0
+            mb = jax.tree.map(
+                lambda x: x.reshape((n, B // n) + x.shape[1:]), batch)
+
+            def acc_fn(carry, b):
+                def lf_mb(p):
+                    return M.loss_fn(p, cfg, run, b)
+                (l, mx), g = jax.value_and_grad(lf_mb, has_aux=True)(params)
+                gsum, lsum = carry
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_fn, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics: Dict[str, jax.Array] = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+
+        lr = lr_schedule(opt.step, base_lr=run.lr,
+                         warmup_steps=run.warmup_steps,
+                         total_steps=run.total_steps)
+        new_params, new_opt, om = adamw_update(
+            grads, opt, params, lr=lr, beta1=run.beta1, beta2=run.beta2,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+        out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, s_max: int) -> Callable:
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, run, batch, s_max=s_max)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig) -> Callable:
+    def serve_step(params, token, cache, cur):
+        return M.decode_step(params, cfg, run, token, cache, cur)
+    return serve_step
+
+
+# --------------------------------------------------------------- lowering --
+def choose_seq_attn(cfg: ModelConfig, shape: ShapeConfig,
+                    min_waste: float = 2.0) -> bool:
+    """Context-parallel attention for this cell? Yes when head sharding
+    would pad the KV heads >= min_waste× on the model axis and the sequence
+    splits evenly (train/prefill only — decode attends a cache)."""
+    if shape.kind == "decode":
+        return False
+    n_model = pspec.logical_axis_size("heads")
+    if n_model <= 1 or cfg.n_kv_heads % n_model == 0:
+        return False
+    if shape.seq_len % n_model != 0:
+        return False
+    return (n_model / cfg.n_kv_heads) >= min_waste
+
+
+def lower_cell(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
+               donate: bool = True):
+    """Lower the step function for one (arch × shape) cell under the active
+    sharding scope. Returns (lowered, kind)."""
+    if choose_seq_attn(cfg, shape):
+        import contextlib
+        scope = pspec.sharding_scope(
+            pspec.active_mesh(), pspec.seq_attn_rules(pspec._SCOPE.rules))
+        with scope:
+            return _lower_cell_inner(cfg, run, shape, donate)
+    return _lower_cell_inner(cfg, run, shape, donate)
+
+
+def _lower_cell_inner(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
+                      donate: bool = True):
+    p_shard = P.param_shardings(cfg)
+    p_abs = P.abstract_params(cfg)
+    b_shard = batch_shardings(cfg, shape)
+    b_abs = M.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, run)
+        o_shard = opt_shardings(cfg)
+        o_abs = abstract_opt_state(p_abs)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1) if donate else ())
+        return jitted.lower(p_abs, o_abs, b_abs), "train"
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, run, s_max=shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        return jitted.lower(p_abs, b_abs), "prefill"
+
+    step = make_serve_step(cfg, run)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, b_shard["token"], b_shard["cache"],
+                      b_shard["cur"]),
+        donate_argnums=(2,) if donate else ())
+    return jitted.lower(p_abs, b_abs["token"], b_abs["cache"],
+                        b_abs["cur"]), "decode"

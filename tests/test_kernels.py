@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.ops import flash_attention, ssd_scan
+
+
+def _rand(i, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(i), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+FA_CASES = [
+    # (B, T, S, Hq, Hkv, d, causal, window)
+    (2, 256, 256, 4, 2, 64, True, None),
+    (1, 128, 128, 2, 1, 32, True, None),
+    (1, 200, 200, 2, 2, 64, True, 64),      # ragged tail + sliding window
+    (2, 128, 128, 3, 3, 64, False, None),   # encoder (bidirectional)
+    (1, 384, 384, 8, 2, 128, True, None),   # GQA 4:1, MXU-width head
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref(case, dtype):
+    B, T, S, Hq, Hkv, d, causal, window = case
+    q = _rand(1, (B, T, Hq, d), dtype)
+    k = _rand(2, (B, S, Hkv, d), dtype)
+    v = _rand(3, (B, S, Hkv, d), dtype)
+    out = flash_attention(q, k, v, causal, window)
+    ref = R.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+        window=window).transpose(0, 2, 1, 3)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+SSD_CASES = [
+    # (B, S, nh, hd, N, chunk)
+    (2, 512, 4, 32, 64, 128),
+    (1, 256, 2, 64, 128, 256),   # paper-config state size
+    (1, 384, 8, 16, 32, 128),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_ref(case, dtype):
+    B, S, nh, hd, N, chunk = case
+    x = _rand(4, (B, S, nh, hd), dtype)
+    dt = jax.nn.softplus(_rand(5, (B, S, nh), jnp.float32))
+    A = -jnp.exp(_rand(6, (nh,), jnp.float32) * 0.5)
+    Bm = _rand(7, (B, S, 1, N), dtype)
+    Cm = _rand(8, (B, S, 1, N), dtype)
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk)
+    y_ref, h_ref = R.ssd_scan_ref(x, dt, A, Bm[:, :, 0], Cm[:, :, 0])
+    atol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=atol, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=atol, rtol=1e-2)
+
+
+def test_kernels_differentiable():
+    q = _rand(1, (1, 128, 2, 32), jnp.float32)
+    k = _rand(2, (1, 128, 1, 32), jnp.float32)
+    v = _rand(3, (1, 128, 1, 32), jnp.float32)
+    g = jax.grad(lambda q: flash_attention(q, k, v, True, None).sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+    x = _rand(4, (1, 256, 2, 16), jnp.float32)
+    dt = jax.nn.softplus(_rand(5, (1, 256, 2), jnp.float32))
+    A = -jnp.exp(_rand(6, (2,), jnp.float32))
+    Bm = _rand(7, (1, 256, 1, 32), jnp.float32)
+    Cm = _rand(8, (1, 256, 1, 32), jnp.float32)
+    gx = jax.grad(lambda x: ssd_scan(x, dt, A, Bm, Cm, 128)[0].sum())(x)
+    assert bool(jnp.all(jnp.isfinite(gx)))
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size must not change the result (associativity of the scan)."""
+    x = _rand(4, (1, 512, 2, 16), jnp.float32)
+    dt = jax.nn.softplus(_rand(5, (1, 512, 2), jnp.float32))
+    A = -jnp.exp(_rand(6, (2,), jnp.float32))
+    Bm = _rand(7, (1, 512, 1, 32), jnp.float32)
+    Cm = _rand(8, (1, 512, 1, 32), jnp.float32)
+    y1, h1 = ssd_scan(x, dt, A, Bm, Cm, 128)
+    y2, h2 = ssd_scan(x, dt, A, Bm, Cm, 256)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=5e-4, rtol=1e-3)

@@ -1,0 +1,35 @@
+"""Serving loop: batched prefill+decode, placement, carbon accounting."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.configs.base import RunConfig
+from repro.runtime.serve_loop import Request, Server, pick_site
+from repro.cluster.topology import default_cluster
+from repro.core.carbon.intensity import PAPER_WINDOW_T0, calibrated_ci
+
+
+def test_server_completes_requests_with_carbon():
+    cfg = get_reduced("smollm-135m", layers=2, d_model=32, vocab=128)
+    run = RunConfig(arch="x", attn_impl="naive", remat="none")
+    srv = Server(cfg, run, batch=2, s_max=24)
+    for i in range(3):
+        srv.submit(Request(rid=i,
+                           prompt=jnp.arange(8, dtype=jnp.int32) + i,
+                           max_new_tokens=4))
+    done1 = srv.step_epoch()
+    done2 = srv.step_epoch()
+    assert len(done1) == 2 and len(done2) == 1
+    for c in done1 + done2:
+        assert len(c.tokens) == 4
+        assert c.emissions_mg > 0
+        assert c.latency_s > 0
+        assert c.site in default_cluster().sites
+
+
+def test_placement_picks_greenest_site():
+    cluster = default_cluster()
+    t = PAPER_WINDOW_T0
+    site = pick_site(cluster, t)
+    cis = {s.name: calibrated_ci(s.zone, t) for s in cluster.sites.values()}
+    assert site == min(cis, key=cis.get)
