@@ -1,8 +1,13 @@
 """Substrate performance benches: kernels vs references (CPU wall time is
 NOT the TPU story — interpret mode — but µs/call regressions still catch
-algorithmic blowups), plus the model-level train-step microbench."""
+algorithmic blowups), the model-level train-step microbench, and the
+carbon-field / grid-planner benches (the scheduler hot path). The planner
+bench writes ``BENCH_planner.json`` so the perf trajectory is tracked
+PR-over-PR."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Dict
 
@@ -58,6 +63,82 @@ def kernel_ssd_vs_ref() -> Dict[str, float]:
     y_ref = R.ssd_scan_ref(x, dt, A, Bm[:, :, 0], Cm[:, :, 0])[0]
     return {"kernel_us": round(t_kernel), "ref_us": round(t_ref),
             "max_err": float(jnp.abs(y - y_ref).max())}
+
+
+def carbon_field() -> Dict[str, float]:
+    """Vectorized CarbonField vs the scalar trace/hop evaluators over the
+    paper window (51 h × 8 hops, the Fig. 2 working set)."""
+    import numpy as np
+
+    from repro.core.carbon.field import CarbonField
+    from repro.core.carbon.intensity import PAPER_WINDOW_HOURS, PAPER_WINDOW_T0
+    from repro.core.carbon.path import discover_path
+
+    p = discover_path("uc", "tacc")
+    ts = PAPER_WINDOW_T0 + 60.0 * np.arange(PAPER_WINDOW_HOURS * 60)
+    f = CarbonField()
+    f.hop_ci_matrix(p, ts)              # warm the hashed-noise cache
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        M = f.hop_ci_matrix(p, ts)
+    t_vec = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    sub = ts[::60]                      # scalar at 1/60 the resolution…
+    S = [[h.ci(t) for t in sub] for h in p.hops]
+    t_scalar = (time.perf_counter() - t0) * 60.0   # …scaled to equal work
+    err = float(np.abs(M[:, ::60] - np.array(S)).max())
+    return {"vec_us": round(t_vec * 1e6), "scalar_us": round(t_scalar * 1e6),
+            "speedup_x": round(t_scalar / t_vec, 1), "max_abs_err": err,
+            "points": int(M.size)}
+
+
+def planner_scan() -> Dict[str, float]:
+    """Vectorized grid planner vs the scalar reference oracle on the 48 h
+    deadline workload (the ISSUE-1 acceptance workload), plus plan_batch
+    fleet throughput. Emits BENCH_planner.json next to the repo root."""
+    from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
+    from repro.core.scheduler.overlay import FTN
+    from repro.core.scheduler.planner import SLA, CarbonPlanner, TransferJob
+
+    ftns = [FTN("uc", "skylake", 10.0), FTN("m1", "apple_m1", 1.2),
+            FTN("tacc", "cascade_lake", 10.0)]
+    pl = CarbonPlanner(ftns)
+    job = TransferJob("bench", 300e9, ("uc", "m1"), "tacc",
+                      SLA(deadline_s=48 * 3600.0), T0)
+    ref = pl.plan_reference(job)         # also the scalar-oracle timing run
+    t0 = time.perf_counter()
+    ref = pl.plan_reference(job)
+    t_ref = time.perf_counter() - t0
+    fast = pl.plan(job)                  # warm field caches
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        fast = pl.plan(job)
+    t_fast = (time.perf_counter() - t0) / n
+    match = (fast.start_t, fast.source, fast.ftn) == \
+        (ref.start_t, ref.source, ref.ftn)
+    emis_rel = abs(fast.predicted_emissions_g - ref.predicted_emissions_g) \
+        / max(ref.predicted_emissions_g, 1e-12)
+    # fleet throughput: distinct submit times defeat the per-plan caches
+    batch = [TransferJob(f"b{i}", (50 + (7 * i) % 400) * 1e9, ("uc", "m1"),
+                         "tacc", SLA(deadline_s=48 * 3600.0),
+                         T0 + (i % 24) * 600.0) for i in range(200)]
+    t0 = time.perf_counter()
+    pl.plan_batch(batch)
+    jobs_per_s = len(batch) / (time.perf_counter() - t0)
+    out = {"plan_us": round(t_fast * 1e6),
+           "reference_us": round(t_ref * 1e6),
+           "speedup_x": round(t_ref / t_fast, 1),
+           "alternatives": fast.alternatives,
+           "alternatives_per_s": round(fast.alternatives / t_fast),
+           "batch_jobs_per_s": round(jobs_per_s, 1),
+           "matches_oracle": int(match and emis_rel < 1e-6),
+           "emissions_rel_err": emis_rel}
+    path = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_planner.json"
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
 
 
 def train_step_microbench() -> Dict[str, float]:

@@ -24,6 +24,8 @@ def _registry():
         ("table2_planner_e2e", F.table2_planner_e2e),
         ("kernel_flash_vs_ref", P.kernel_flash_vs_ref),
         ("kernel_ssd_vs_ref", P.kernel_ssd_vs_ref),
+        ("carbon_field", P.carbon_field),
+        ("planner_scan", P.planner_scan),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify entrypoint (see ROADMAP.md): run from the repo root or any
+# subdirectory; mirrors exactly what CI runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

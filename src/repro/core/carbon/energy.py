@@ -61,6 +61,26 @@ HOST_PROFILES: Dict[str, HostPowerModel] = {
 }
 
 
+# endpoint name (path.ENDPOINTS key) -> HOST_PROFILES key. The Table-2
+# testbed nodes map to their measured hardware; the cluster sites are TPU
+# hosts; anything unknown is treated as a storage frontend.
+ENDPOINT_PROFILES: Dict[str, str] = {
+    "uc": "skylake",
+    "tacc": "cascade_lake",
+    "m1": "apple_m1",
+    "site_ca": "tpu_host",
+    "site_or": "tpu_host",
+    "site_ne": "tpu_host",
+    "site_qc": "tpu_host",
+    "site_de": "tpu_host",
+}
+
+
+def host_profile_for_endpoint(endpoint: str) -> HostPowerModel:
+    """Receiver/sender power model for a named endpoint (paper Table 2)."""
+    return HOST_PROFILES[ENDPOINT_PROFILES.get(endpoint, "storage_frontend")]
+
+
 # per-hop device classes: (watts attributable at line rate, line rate Gbps).
 # Backbone routers burn hundreds of watts per port; campus gear less. We
 # charge transfers the utilization-proportional share (the traffic-

@@ -133,11 +133,18 @@ def calibrated_ci(zone: str, t: float) -> float:
     """Region CI with the paper-window affine calibration applied (keeps the
     relative structure of every region, pins the UC→TACC path average to the
     published Fig. 3 extremes)."""
+    a, b = get_calibration()
+    return max(a * REGIONS[zone].ci(t) + b, 0.5)
+
+
+def get_calibration() -> Tuple[float, float]:
+    """The paper-window affine (a, b), computed once and cached. Shared by
+    the scalar path and the vectorized CarbonField so both apply the exact
+    same calibration constants."""
     global _CAL
     if _CAL is None:
         _CAL = _calibration()
-    a, b = _CAL
-    return max(a * REGIONS[zone].ci(t) + b, 0.5)
+    return _CAL
 
 
 @dataclasses.dataclass

@@ -8,6 +8,7 @@ hop-by-hop and aggregate carbon intensity that Fig. 2 visualizes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.carbon.geo import IPInfo, geolocate, haversine_km
@@ -103,10 +104,15 @@ def _reverse(key: Tuple[str, str]) -> Optional[Sequence[str]]:
     return tuple(reversed(rev)) if rev is not None else None
 
 
+@functools.lru_cache(maxsize=None)
 def discover_path(src: str, dst: str, *, base_rtt_ms: float = 0.4
                   ) -> NetworkPath:
     """Traceroute stand-in: resolve the hop list for (src, dst) and geolocate
-    every hop. RTT grows with great-circle distance (~1 ms per 100 km)."""
+    every hop. RTT grows with great-circle distance (~1 ms per 100 km).
+
+    Memoized: the route registry is static, ``NetworkPath``/``Hop`` are
+    frozen, and the planner's grid scan asks for the same handful of paths
+    thousands of times per plan."""
     if src == dst:
         ip = ENDPOINTS[src]
         h = Hop(ip, geolocate(ip), base_rtt_ms)

@@ -17,14 +17,24 @@ Two metrics:
 
 ``TransferLedger`` samples both live during a transfer (§3.4: "track both
 numbers over the duration of the entire file transfer").
+
+``transfer_emissions_g`` is served by the vectorized CarbonField prefix-sum
+integral; ``transfer_emissions_g_batch`` scores many start times in one
+pass, and ``transfer_emissions_g_reference`` keeps the scalar seed loop as
+the equivalence-test oracle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, TYPE_CHECKING
+
+import numpy as np
 
 from repro.core.carbon.energy import HostPowerModel, hop_power_w
 from repro.core.carbon.path import NetworkPath
+
+if TYPE_CHECKING:                      # avoid import cycle at runtime
+    from repro.core.carbon.field import CarbonField
 
 
 def carbonscore(bytes_moved: float, avg_ci: float, duration_s: float) -> float:
@@ -38,8 +48,49 @@ def transfer_emissions_g(path: NetworkPath, sender: HostPowerModel,
                          receiver: HostPowerModel, bytes_moved: float,
                          t0: float, throughput_gbps: float, *,
                          parallelism: int = 1, concurrency: int = 1,
-                         dt_s: float = 60.0) -> float:
-    """gCO₂eq for moving ``bytes_moved`` along ``path`` starting at t0."""
+                         dt_s: float = 60.0,
+                         field: Optional["CarbonField"] = None) -> float:
+    """gCO₂eq for moving ``bytes_moved`` along ``path`` starting at t0.
+
+    Fast path: delegates to the shared :class:`CarbonField`'s prefix-sum
+    integral (one vectorized pass instead of a per-minute Python loop).
+    ``transfer_emissions_g_reference`` keeps the original scalar loop as the
+    oracle the equivalence tests compare against.
+    """
+    from repro.core.carbon.field import default_field
+    f = field or default_field()
+    out = f.transfer_emissions_g(path, sender, receiver, bytes_moved,
+                                 t0, throughput_gbps,
+                                 parallelism=parallelism,
+                                 concurrency=concurrency, dt_s=dt_s)
+    return float(out[0])
+
+
+def transfer_emissions_g_batch(path: NetworkPath, sender: HostPowerModel,
+                               receiver: HostPowerModel, bytes_moved: float,
+                               t0s, throughput_gbps: float, *,
+                               parallelism: int = 1, concurrency: int = 1,
+                               dt_s: float = 60.0,
+                               field: Optional["CarbonField"] = None
+                               ) -> np.ndarray:
+    """Emissions for every candidate start time in ``t0s`` at once (the
+    planner's slot scan): one cumulative-sum pass over a shared dt_s grid."""
+    from repro.core.carbon.field import default_field
+    f = field or default_field()
+    return f.transfer_emissions_g(path, sender, receiver, bytes_moved,
+                                  t0s, throughput_gbps,
+                                  parallelism=parallelism,
+                                  concurrency=concurrency, dt_s=dt_s)
+
+
+def transfer_emissions_g_reference(path: NetworkPath, sender: HostPowerModel,
+                                   receiver: HostPowerModel,
+                                   bytes_moved: float, t0: float,
+                                   throughput_gbps: float, *,
+                                   parallelism: int = 1, concurrency: int = 1,
+                                   dt_s: float = 60.0) -> float:
+    """Scalar reference oracle: per-step Python-loop integral (the seed
+    implementation, kept verbatim for equivalence testing)."""
     if throughput_gbps <= 0:
         return float("inf")
     duration_s = bytes_moved * 8.0 / (throughput_gbps * 1e9)

@@ -77,18 +77,52 @@ _ARCH = {"cascade_lake": "x86_64", "skylake": "x86_64", "apple_m1": "arm64",
 
 
 class Pmeter:
-    """Per-node metric collector, fed by the transfer engine."""
+    """Per-node metric collector, fed by the transfer engine.
+
+    When constructed with a grid ``zone``, the collector also prices every
+    record against the shared :class:`CarbonField` (one hashed-noise cache
+    for the whole process) so live gCO₂ accounting costs an array lookup,
+    not a fresh trace evaluation per sample.
+    """
 
     def __init__(self, node_id: str, profile: str = "tpu_host",
-                 interface: str = "eth0", mtu: int = 9000):
+                 interface: str = "eth0", mtu: int = 9000,
+                 zone: Optional[str] = None, field=None):
         self.node_id = node_id
         self.profile: HostPowerModel = HOST_PROFILES[profile]
         self.profile_name = profile
         self.interface = interface
         self.mtu = mtu
+        self.zone = zone
+        self._field = field
         self.records: List[PmeterRecord] = []
         self._pkts_sent = 0
         self._pkts_recv = 0
+
+    @property
+    def field(self):
+        if self._field is None:
+            from repro.core.carbon.field import default_field
+            self._field = default_field()
+        return self._field
+
+    def ci(self, t: float) -> float:
+        """Local grid CI at time t (0.0 when the node has no zone)."""
+        if self.zone is None:
+            return 0.0
+        return float(self.field.zone_ci(self.zone, t))
+
+    def emissions_g(self) -> float:
+        """gCO₂eq accumulated over the recorded samples: P(rec)·CI(zone)
+        integrated with left-step weights over the record timestamps."""
+        if self.zone is None or len(self.records) < 2:
+            return 0.0
+        import numpy as np
+        ts = np.array([r.t for r in self.records])
+        powers = np.array([self.power_w(r) for r in self.records])
+        cis = self.field.zone_ci(self.zone, ts)
+        steps = np.diff(ts)
+        return float((powers[:-1] * cis[:-1] * steps).sum() / 3.6e6)
 
     def measure(self, t: float, *, cpu_util: float, mem_util: float,
                 tx_gbps: float, rx_gbps: float, rtt_src_ms: float = 0.2,

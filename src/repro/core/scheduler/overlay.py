@@ -34,14 +34,20 @@ class FTNChoice:
 
 
 def best_ftn(ftns: Sequence[FTN], source: str, t: float, *,
-             ci_fn: Optional[Callable[[NetworkPath, float], float]] = None
-             ) -> FTNChoice:
+             ci_fn: Optional[Callable[[NetworkPath, float], float]] = None,
+             field=None) -> FTNChoice:
     """Pick the FTN whose end-to-end path from ``source`` is greenest (the
-    FTN is the receiving end system — its region counts, per Fig. 1)."""
+    FTN is the receiving end system — its region counts, per Fig. 1).
+    Without a forecast hook the CI reads go through the shared CarbonField,
+    so repeated calls (migration polling) hit the hashed-noise cache."""
+    if ci_fn is None:
+        from repro.core.carbon.field import default_field
+        fld = field or default_field()
+        ci_fn = lambda p, tt: float(fld.path_ci(p, tt))  # noqa: E731
     scored: List[Tuple[FTN, NetworkPath, float]] = []
     for f in ftns:
         p = discover_path(source, f.name)
-        ci = ci_fn(p, t) if ci_fn else p.ci(t)
+        ci = ci_fn(p, t)
         scored.append((f, p, ci))
     scored.sort(key=lambda x: x[2])
     f, p, ci = scored[0]

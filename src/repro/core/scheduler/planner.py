@@ -4,20 +4,31 @@ Searches the (start slot, source replica, FTN) grid, predicting duration
 from the throughput model and emissions from the [14] power models, and
 minimizes a QoS-weighted objective:
 
-    cost = w_carbon · gCO₂(plan) + w_perf · duration / deadline_slack
+    cost = w_carbon · gCO₂(plan) + w_perf · (finish − submit) / deadline
 
 subject to: finish before the deadline; optional carbon budget. This is the
 "SLA" §5 proposes: the user picks the carbon/performance trade-off.
+
+``plan()`` scores the whole grid with array ops on the shared
+:class:`CarbonField` — every (FTN, source) leg evaluates all start slots
+from one prefix-sum emission pass. ``plan_reference()`` keeps the scalar
+nested-loop implementation as the oracle the equivalence tests compare
+against; ``plan_batch()`` amortizes the field/path caches over a fleet of
+jobs.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
-from repro.core.carbon.energy import HOST_PROFILES
+import numpy as np
+
+from repro.core.carbon.energy import HOST_PROFILES, host_profile_for_endpoint
+from repro.core.carbon.field import CarbonField, default_field
 from repro.core.carbon.path import NetworkPath, discover_path
-from repro.core.carbon.score import carbonscore, transfer_emissions_g
+from repro.core.carbon.score import (carbonscore, transfer_emissions_g,
+                                     transfer_emissions_g_reference)
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.time_shift import expected_transfer_ci
 from repro.core.transfer.throughput import ThroughputModel
@@ -61,25 +72,46 @@ class Plan:
     alternatives: int = 0
 
 
+def _plan_cost(sla: SLA, emissions_g: float, finish_rel_s) -> float:
+    """The SLA objective: w_carbon·emissions + w_perf·normalized duration.
+
+    The perf term is the job's wall-clock span normalized by the deadline —
+    it must NOT rescale with emissions (the seed multiplied the two, so
+    w_perf silently grew with job size). Accepts scalars or arrays.
+    """
+    slack = max(sla.deadline_s, 1.0)
+    return sla.w_carbon * emissions_g + sla.w_perf * finish_rel_s / slack
+
+
 class CarbonPlanner:
     def __init__(self, ftns: Sequence[FTN],
                  throughput: Optional[ThroughputModel] = None,
                  slot_s: float = 3600.0,
-                 ci_fn: Optional[Callable[[NetworkPath, float], float]] = None):
+                 ci_fn: Optional[Callable[[NetworkPath, float], float]] = None,
+                 field: Optional[CarbonField] = None):
         self.ftns = list(ftns)
         self.throughput = throughput or ThroughputModel()
         self.slot_s = slot_s
         self.ci_fn = ci_fn             # forecast hook; None = oracle trace
+        self.field = field or default_field()
 
     def _ci(self, path: NetworkPath, t0: float, dur: float) -> float:
         if self.ci_fn is not None:
             return self.ci_fn(path, t0)
         return expected_transfer_ci(path, t0, dur)
 
-    def plan(self, job: TransferJob) -> Plan:
-        deadline_t = job.submitted_t + job.sla.deadline_s
-        best: Optional[Plan] = None
-        n_alt = 0
+    def _ci_vec(self, path: NetworkPath, t0s: np.ndarray, dur: float
+                ) -> np.ndarray:
+        if self.ci_fn is not None:
+            return np.array([self.ci_fn(path, float(t)) for t in t0s])
+        return self.field.expected_transfer_ci(path, t0s, dur)
+
+    def _candidates(self, job: TransferJob
+                    ) -> Iterator[Tuple[FTN, str, List[Tuple[str, str]],
+                                        float, float]]:
+        """(ftn, source, legs, predicted_gbps, predicted_duration) for every
+        (FTN × replica) cell of the grid — shared by plan()/plan_reference()
+        so both scan the identical candidate set in the identical order."""
         for ftn in self.ftns:
             # an FTN relays source → ftn → dst; a direct transfer is the
             # degenerate FTN co-located with dst.
@@ -92,52 +124,122 @@ class CarbonPlanner:
                            for a, b in legs)
                 gbps = min(gbps, ftn.max_gbps)
                 dur = job.size_bytes * 8.0 / (gbps * 1e9)
-                t = job.submitted_t
-                while t + dur <= deadline_t + 1e-9 or t == job.submitted_t:
-                    emis, ci_acc = 0.0, 0.0
-                    for (a, b) in legs:
-                        p = discover_path(a, b)
-                        emis += transfer_emissions_g(
-                            p, HOST_PROFILES["storage_frontend"],
-                            ftn.power_model, job.size_bytes, t, gbps,
-                            parallelism=job.parallelism,
-                            concurrency=job.concurrency)
-                        ci_acc += self._ci(p, t, dur)
-                    avg_ci = ci_acc / len(legs)
-                    feasible = t + dur <= deadline_t + 1e-9
-                    if job.sla.carbon_budget_g is not None:
-                        feasible &= emis <= job.sla.carbon_budget_g
-                    slack = max(job.sla.deadline_s, 1.0)
-                    cost = (job.sla.w_carbon * emis
-                            + job.sla.w_perf * (t + dur - job.submitted_t)
-                            / slack * emis if job.sla.w_perf else
-                            job.sla.w_carbon * emis)
-                    n_alt += 1
-                    cand = Plan(
-                        job_uuid=job.uuid, start_t=t, source=src,
-                        ftn=ftn.name, path=discover_path(src, ftn.name),
-                        predicted_gbps=gbps, predicted_duration_s=dur,
-                        predicted_emissions_g=emis, predicted_avg_ci=avg_ci,
-                        predicted_carbonscore=carbonscore(
-                            job.size_bytes, avg_ci, dur),
-                        cost=cost, feasible=feasible)
-                    if feasible and (best is None or cand.cost < best.cost):
-                        best = cand
-                    t += self.slot_s
+                yield ftn, src, legs, gbps, dur
+
+    def _slot_starts(self, job: TransferJob, dur: float,
+                     deadline_t: float) -> np.ndarray:
+        """Candidate start times: every slot that finishes by the deadline,
+        or just the immediate start when none fits (SLA-first)."""
+        latest = deadline_t - dur
+        n = 1
+        if latest + 1e-9 >= job.submitted_t:
+            n = int((latest + 1e-9 - job.submitted_t) // self.slot_s) + 1
+        return job.submitted_t + self.slot_s * np.arange(n)
+
+    # --- vectorized fast path ---------------------------------------------
+    def plan(self, job: TransferJob) -> Plan:
+        deadline_t = job.submitted_t + job.sla.deadline_s
+        best: Optional[Plan] = None
+        n_alt = 0
+        for ftn, src, legs, gbps, dur in self._candidates(job):
+            ts = self._slot_starts(job, dur, deadline_t)
+            emis = np.zeros(ts.shape)
+            ci_acc = np.zeros(ts.shape)
+            for (a, b) in legs:
+                p = discover_path(a, b)
+                emis += self.field.transfer_emissions_g(
+                    p, HOST_PROFILES["storage_frontend"], ftn.power_model,
+                    job.size_bytes, ts, gbps,
+                    parallelism=job.parallelism, concurrency=job.concurrency)
+                ci_acc += self._ci_vec(p, ts, dur)
+            avg_ci = ci_acc / len(legs)
+            feasible = ts + dur <= deadline_t + 1e-9
+            if job.sla.carbon_budget_g is not None:
+                feasible &= emis <= job.sla.carbon_budget_g
+            cost = _plan_cost(job.sla, emis, ts + dur - job.submitted_t)
+            n_alt += len(ts)
+            if not feasible.any():
+                continue
+            i = int(np.argmin(np.where(feasible, cost, np.inf)))
+            if best is None or cost[i] < best.cost:
+                best = Plan(
+                    job_uuid=job.uuid, start_t=float(ts[i]), source=src,
+                    ftn=ftn.name, path=discover_path(src, ftn.name),
+                    predicted_gbps=gbps, predicted_duration_s=dur,
+                    predicted_emissions_g=float(emis[i]),
+                    predicted_avg_ci=float(avg_ci[i]),
+                    predicted_carbonscore=carbonscore(
+                        job.size_bytes, float(avg_ci[i]), dur),
+                    cost=float(cost[i]), feasible=True)
         if best is None:
-            # SLA-infeasible: start now on the best-throughput direct path
-            src = job.replicas[0]
-            gbps = self.throughput.predict(src, job.dst, job.parallelism,
-                                           job.concurrency)
-            dur = job.size_bytes * 8.0 / (gbps * 1e9)
-            p = discover_path(src, job.dst)
-            emis = transfer_emissions_g(
-                p, HOST_PROFILES["storage_frontend"],
-                HOST_PROFILES["tpu_host"], job.size_bytes,
-                job.submitted_t, gbps)
-            ci = self._ci(p, job.submitted_t, dur)
-            return Plan(job.uuid, job.submitted_t, src, job.dst, p, gbps,
-                        dur, emis, ci,
-                        carbonscore(job.size_bytes, ci, dur),
-                        cost=math.inf, feasible=False, alternatives=n_alt)
+            return self._fallback(job, n_alt)
         return dataclasses.replace(best, alternatives=n_alt)
+
+    def plan_batch(self, jobs: Sequence[TransferJob]) -> List[Plan]:
+        """Fleet-scale planning: one call, shared caches. The first plan
+        warms the path/noise/trace caches; the rest reuse them, so per-job
+        cost is dominated by the array ops alone."""
+        return [self.plan(job) for job in jobs]
+
+    # --- scalar reference oracle ------------------------------------------
+    def plan_reference(self, job: TransferJob) -> Plan:
+        """The seed's nested-loop scan, kept as the correctness oracle for
+        the vectorized ``plan()`` (tests assert both pick the same
+        (start, source, ftn) cell with emissions within 1e-6)."""
+        deadline_t = job.submitted_t + job.sla.deadline_s
+        best: Optional[Plan] = None
+        n_alt = 0
+        for ftn, src, legs, gbps, dur in self._candidates(job):
+            t = job.submitted_t
+            while t + dur <= deadline_t + 1e-9 or t == job.submitted_t:
+                emis, ci_acc = 0.0, 0.0
+                for (a, b) in legs:
+                    p = discover_path(a, b)
+                    emis += transfer_emissions_g_reference(
+                        p, HOST_PROFILES["storage_frontend"],
+                        ftn.power_model, job.size_bytes, t, gbps,
+                        parallelism=job.parallelism,
+                        concurrency=job.concurrency)
+                    ci_acc += self._ci(p, t, dur)
+                avg_ci = ci_acc / len(legs)
+                feasible = t + dur <= deadline_t + 1e-9
+                if job.sla.carbon_budget_g is not None:
+                    feasible &= emis <= job.sla.carbon_budget_g
+                cost = _plan_cost(job.sla, emis, t + dur - job.submitted_t)
+                n_alt += 1
+                cand = Plan(
+                    job_uuid=job.uuid, start_t=t, source=src,
+                    ftn=ftn.name, path=discover_path(src, ftn.name),
+                    predicted_gbps=gbps, predicted_duration_s=dur,
+                    predicted_emissions_g=emis, predicted_avg_ci=avg_ci,
+                    predicted_carbonscore=carbonscore(
+                        job.size_bytes, avg_ci, dur),
+                    cost=cost, feasible=feasible)
+                if feasible and (best is None or cand.cost < best.cost):
+                    best = cand
+                t += self.slot_s
+        if best is None:
+            return self._fallback(job, n_alt, reference=True)
+        return dataclasses.replace(best, alternatives=n_alt)
+
+    def _fallback(self, job: TransferJob, n_alt: int, *,
+                  reference: bool = False) -> Plan:
+        """SLA-infeasible: start now on the best-throughput direct path.
+        The receiver power model is derived from the actual destination
+        endpoint (the seed hard-coded the TPU-host profile)."""
+        src = job.replicas[0]
+        gbps = self.throughput.predict(src, job.dst, job.parallelism,
+                                       job.concurrency)
+        dur = job.size_bytes * 8.0 / (gbps * 1e9)
+        p = discover_path(src, job.dst)
+        emis_fn = (transfer_emissions_g_reference if reference
+                   else transfer_emissions_g)
+        emis = emis_fn(
+            p, HOST_PROFILES["storage_frontend"],
+            host_profile_for_endpoint(job.dst), job.size_bytes,
+            job.submitted_t, gbps)
+        ci = self._ci(p, job.submitted_t, dur)
+        return Plan(job.uuid, job.submitted_t, src, job.dst, p, gbps,
+                    dur, emis, ci,
+                    carbonscore(job.size_bytes, ci, dur),
+                    cost=math.inf, feasible=False, alternatives=n_alt)

@@ -33,6 +33,11 @@ class CarbonAwareQueue:
         self._seq += 1
         return plan
 
+    def submit_many(self, jobs: List[TransferJob]) -> List[Plan]:
+        """Fleet admission: every plan shares the planner's CarbonField
+        caches; one enqueue path (submit) keeps the ordering logic single."""
+        return [self.submit(job) for job in jobs]
+
     def due(self, now: float) -> List[Tuple[TransferJob, Plan]]:
         """Pop every job whose planned start has arrived."""
         out = []
@@ -46,15 +51,15 @@ class CarbonAwareQueue:
         stochastic, §5). Returns how many plans changed."""
         entries = list(self._heap)
         self._heap = []
+        shifted = [dataclasses.replace(
+            e.job, submitted_t=now,
+            sla=dataclasses.replace(
+                e.job.sla,
+                deadline_s=max(e.job.submitted_t + e.job.sla.deadline_s
+                               - now, 1.0)))
+            for e in entries]
         changed = 0
-        for e in entries:
-            job = dataclasses.replace(
-                e.job, submitted_t=now,
-                sla=dataclasses.replace(
-                    e.job.sla,
-                    deadline_s=max(e.job.submitted_t + e.job.sla.deadline_s
-                                   - now, 1.0)))
-            plan = self.planner.plan(job)
+        for e, plan in zip(entries, self.planner.plan_batch(shifted)):
             if (plan.source, plan.ftn, plan.start_t) != (
                     e.plan.source, e.plan.ftn, e.plan.start_t):
                 changed += 1

@@ -7,6 +7,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Tuple
 
+import numpy as np
+
 from repro.core.carbon.path import NetworkPath
 
 
@@ -34,11 +36,12 @@ def expected_transfer_ci(path: NetworkPath, t0: float, duration_s: float,
 
 def best_start_time(path: NetworkPath, *, now: float, deadline: float,
                     predicted_duration_s: float, slot_s: float = 3600.0,
-                    ci_fn: Optional[Callable[[float], float]] = None
-                    ) -> TimeShiftDecision:
+                    ci_fn: Optional[Callable[[float], float]] = None,
+                    field=None) -> TimeShiftDecision:
     """Scan candidate start slots in [now, deadline - duration] and pick the
     lowest expected average CI. ``ci_fn`` lets callers pass a *forecast*
-    instead of the oracle trace (§5)."""
+    instead of the oracle trace (§5); without one, the whole slot scan is a
+    single vectorized query against the shared CarbonField."""
     latest = deadline - predicted_duration_s
     if latest < now:
         # cannot fit before the deadline: start immediately (SLA first)
@@ -46,6 +49,20 @@ def best_start_time(path: NetworkPath, *, now: float, deadline: float,
                                    ci_fn=ci_fn)
         return TimeShiftDecision(now, ci0, now + predicted_duration_s,
                                  ci0, 1.0)
+    if ci_fn is None:
+        from repro.core.carbon.field import default_field
+        f = field or default_field()
+        ts = now + slot_s * np.arange(int((latest + 1e-9 - now) // slot_s)
+                                      + 1)
+        cis = f.expected_transfer_ci(path, ts, predicted_duration_s)
+        i = int(np.argmin(cis))        # first minimum, like the scalar scan
+        best_t, best_ci = float(ts[i]), float(cis[i])
+        baseline = float(cis[0])       # ts[0] == now
+        return TimeShiftDecision(
+            start_t=best_t, expected_ci=best_ci,
+            expected_finish_t=best_t + predicted_duration_s,
+            baseline_ci=baseline,
+            savings_factor=(baseline / best_ci) if best_ci > 0 else 1.0)
     best_t, best_ci = now, None
     t = now
     while t <= latest + 1e-9:

@@ -178,7 +178,9 @@ def _multipliers(comps, entry: str) -> Dict[str, float]:
 def _dot_flops(ins: Instruction, symtab: Dict[str, str]) -> float:
     out_dims = _shape_dims(ins.type_str) or []
     out_elems = math.prod(out_dims) if out_dims else 1
-    mo = re.search(r"dot\(%?([\w.\-]+)", ins.line)
+    # operand may be bare (`dot(%a, ...)`) or typed
+    # (`dot(f32[64,128]{1,0} %a, ...)`) depending on the XLA text version
+    mo = re.search(r"dot\([^%)]*%([\w.\-]+)", ins.line)
     mk = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
     k = 1
     if mo and mk:

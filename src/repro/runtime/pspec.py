@@ -85,6 +85,19 @@ def active_mesh() -> Optional[Mesh]:
     return _SCOPE.mesh
 
 
+def abstract_mesh(axis_sizes: Tuple[int, ...],
+                  axis_names: Tuple[str, ...]):
+    """Version-compat ``jax.sharding.AbstractMesh``: newer jax takes
+    (axis_sizes, axis_names); older releases take one shape_tuple of
+    (name, size) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))
+
+
 def axis_size(physical: Union[str, Tuple[str, ...], None]) -> int:
     """Product of mesh sizes of the given physical axes (1 if absent)."""
     mesh = _SCOPE.mesh

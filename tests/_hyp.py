@@ -1,0 +1,28 @@
+"""Optional-hypothesis shim: the property tests skip individually when
+hypothesis is absent, while the plain tests in the same module keep
+running (a module-level importorskip would silently disable them too).
+
+Usage:  from _hyp import given, hst
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for hypothesis.strategies: any strategy constructor
+        returns None (the @given stub ignores its arguments anyway)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hst = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f

@@ -4,12 +4,17 @@ import os
 # dry-run sets xla_force_host_platform_device_count (see launch/dryrun.py)
 os.environ.setdefault("JAX_ENABLE_X64", "0")
 
-from hypothesis import settings, HealthCheck
-
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow],
-)
-settings.load_profile("repro")
+# hypothesis is optional (requirements-dev.txt): without it the property
+# tests importorskip themselves, and the rest of the suite must still run.
+try:
+    from hypothesis import settings, HealthCheck
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro")

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+
+from _hyp import given, settings, hst  # optional-hypothesis shim
 
 from repro.configs import get_reduced, ShapeConfig
 from repro.configs.base import RunConfig

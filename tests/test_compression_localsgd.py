@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as hst
+
+from _hyp import given, hst  # optional-hypothesis shim
 
 from repro.optim.compression import (compress_tree, decompress_tree,
                                      dequantize_int8, init_compression_state,

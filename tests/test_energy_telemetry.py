@@ -3,7 +3,8 @@ import dataclasses
 import json
 
 import pytest
-from hypothesis import given, strategies as hst
+
+from _hyp import given, hst  # optional-hypothesis shim
 
 from repro.core.carbon.energy import HOST_PROFILES, hop_power_w
 from repro.core.carbon.telemetry import (HostMetrics, NetworkMetrics,

@@ -1,6 +1,7 @@
 """Fault injection, straggler mitigation, elastic re-meshing, migration."""
 import pytest
-from hypothesis import given, strategies as hst
+
+from _hyp import given, hst  # optional-hypothesis shim
 
 from repro.cluster.elastic import ElasticPlanner
 from repro.cluster.faults import FaultInjector, StragglerModel

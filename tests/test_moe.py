@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as hst
+
+from _hyp import given, hst  # optional-hypothesis shim
 
 from repro.configs.base import MoEConfig
 from repro.models.moe import capacity, dispatch_indices, moe_ffn, route

@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, strategies as hst
+
+from _hyp import given, hst  # optional-hypothesis shim
 from jax.sharding import PartitionSpec as P
 
 from repro.runtime import pspec
@@ -18,7 +19,7 @@ def test_resolve_outside_mesh_is_replicated_identity():
 @given(dim0=hst.integers(1, 64), dim1=hst.integers(1, 64))
 def test_resolve_never_produces_uneven_sharding(dim0, dim1):
     # AbstractMesh: resolver semantics don't need physical devices
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = pspec.abstract_mesh((2, 2), ("data", "model"))
     with pspec.sharding_scope(mesh, "2d"):
         spec = pspec.resolve(("batch", "heads"), shape=(dim0, dim1))
         sizes = dict(mesh.shape)
@@ -33,7 +34,7 @@ def test_resolve_never_produces_uneven_sharding(dim0, dim1):
 
 
 def test_resolve_no_axis_reuse_across_dims():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = pspec.abstract_mesh((2, 2), ("data", "model"))
     with pspec.sharding_scope(mesh, "2d"):
         # 'expert' and 'ffn' both map to 'model'; only one may win
         spec = pspec.resolve(("expert", "fsdp", "ffn"), shape=(4, 4, 4))
@@ -46,7 +47,7 @@ def test_resolve_no_axis_reuse_across_dims():
 
 
 def test_rule_sets_degrade_for_missing_axes():
-    mesh = jax.sharding.AbstractMesh((2,), ("data",))   # no 'model' axis
+    mesh = pspec.abstract_mesh((2,), ("data",))   # no 'model' axis
     with pspec.sharding_scope(mesh, "2d"):
         spec = pspec.resolve(("batch", "heads"), shape=(8, 8))
         assert spec == P("data", None)

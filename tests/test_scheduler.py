@@ -2,7 +2,8 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, strategies as hst
+
+from _hyp import given, hst  # optional-hypothesis shim
 
 from repro.core.carbon.intensity import PAPER_WINDOW_T0
 from repro.core.carbon.path import discover_path
