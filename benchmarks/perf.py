@@ -141,6 +141,53 @@ def planner_scan() -> Dict[str, float]:
     return out
 
 
+def fleet_loop() -> Dict[str, float]:
+    """Fleet control-plane bench: a 400-job / ~14 h closed-loop run through
+    the FleetController (admission, slot-timed dispatch, per-step engine
+    ticks, hourly re-plans, migration polling, one mid-run CI shock).
+    Emits BENCH_fleet.json; the acceptance floor is >= 50 jobs/s end to end
+    on CPU."""
+    from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
+    from repro.core.controlplane import FleetController
+    from repro.core.scheduler.overlay import FTN
+    from repro.core.scheduler.planner import SLA, TransferJob
+
+    ftns = [FTN("uc", "skylake", 10.0), FTN("m1", "apple_m1", 1.2),
+            FTN("site_qc", "cascade_lake", 40.0),
+            FTN("tacc", "cascade_lake", 10.0)]
+    fc = FleetController(ftns, migration_threshold=250.0)
+    n = 400
+    jobs = [TransferJob(
+        f"f{i}", (200 + (37 * i) % 1800) * 1e9,
+        ("uc", "site_ne") if i % 3 else ("uc",), "tacc",
+        SLA(deadline_s=(6 + i % 12) * 3600.0),
+        T0 + (i % 96) * 300.0) for i in range(n)]
+    fc.submit_many(jobs)
+    # the clean-relay regions go dirty mid-run (cf. examples/fleet_day.py)
+    fc.inject_shock(T0 + 6 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                    zones=("CA-QC", "US-NY-NYIS"))
+    rep = fc.run()
+    audit_rel = abs(rep.ledger_total_g - rep.total_actual_g) \
+        / max(rep.total_actual_g, 1e-12)
+    out = {"jobs": rep.n_jobs, "completed": rep.n_completed,
+           "jobs_per_s": round(rep.jobs_per_s, 1),
+           "events_per_s": round(rep.n_events / max(rep.wall_s, 1e-9)),
+           "n_events": rep.n_events, "n_steps": rep.n_steps,
+           "migrations": rep.migrations,
+           "replan_sweeps": rep.replan_events,
+           "plans_changed": rep.plans_changed,
+           "sla_misses": rep.sla_misses,
+           "planned_kg": round(rep.total_planned_g / 1000, 2),
+           "actual_kg": round(rep.total_actual_g / 1000, 2),
+           "ledger_audit_rel_err": audit_rel,
+           "sim_hours": round(rep.sim_span_s / 3600, 1),
+           "wall_s": round(rep.wall_s, 2)}
+    path = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_fleet.json"
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
+
+
 def train_step_microbench() -> Dict[str, float]:
     """Tokens/s of the reduced smollm on this host (CPU; scale reference)."""
     cfg = get_reduced("smollm-135m", layers=4, d_model=128, vocab=512)

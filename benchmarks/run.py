@@ -26,6 +26,7 @@ def _registry():
         ("kernel_ssd_vs_ref", P.kernel_ssd_vs_ref),
         ("carbon_field", P.carbon_field),
         ("planner_scan", P.planner_scan),
+        ("fleet_loop", P.fleet_loop),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

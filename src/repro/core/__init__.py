@@ -6,4 +6,7 @@ Subpackages:
   scheduler/  the three levers — time shifting, space shifting, overlay FTN
               selection/migration — plus the joint SLA planner
   transfer/   the data-movement engine the scheduler drives
+  controlplane/ the event-driven fleet runtime composing all of the above:
+              one simulation clock, admit -> plan -> dispatch -> step ->
+              observe -> re-plan/migrate -> complete, FleetReport accounting
 """

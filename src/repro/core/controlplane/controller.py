@@ -1,0 +1,546 @@
+"""The FleetController: admit -> plan -> dispatch -> step -> observe ->
+re-plan/migrate -> complete, on one event clock.
+
+The paper's headline result is *end-to-end* carbon savings: plans must
+survive contact with stochastic throughput and drifting carbon intensity
+(§4.3, §5), which means re-planning queued jobs and migrating in-flight
+ones while transfers run. The controller composes the existing layers into
+that closed loop:
+
+* **admit** — ``JobArrival`` hands the job to the :class:`CarbonAwareQueue`
+  (admission policy over the shared :class:`EventLoop`); the planner picks
+  its (start, source, FTN) grid cell and a ``JobReady`` event is scheduled
+  at the chosen slot.
+* **dispatch** — ``JobReady`` starts a :class:`TransferEngine` state for the
+  planned route. A relay plan (source -> FTN -> dst) runs as one
+  store-and-forward stream at the bottleneck-leg rate, matching the
+  planner's duration/emission model.
+* **step/observe** — each ``StepTick`` advances one transfer by one
+  (pro-rated) engine step; the controller samples the *measured* path CI
+  (forecast trace x any active :class:`ForecastShock`), feeds the ledger
+  and accumulates actual emissions as device-power x CI x step.
+* **re-plan** — ``ReplanTick`` sweeps still-queued jobs through the
+  planner's incremental ``plan_batch`` (jobs whose cell re-scores within
+  ``drift_tol`` keep it; the rest get a full grid scan). A
+  ``ForecastShock`` triggers an immediate full re-plan.
+* **migrate** — ``MigrationCheck`` polls in-flight transfers against the
+  :class:`OverlayScheduler` threshold; a migration checkpoints the engine
+  state (``TransferState.checkpoint``) and resumes the remaining bytes on
+  the greener FTN — bytes already moved are never re-transferred.
+
+``run()`` drains the loop and emits a :class:`FleetReport` with per-job
+planned-vs-actual emissions, migrations, SLA misses and fleet throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.carbon.energy import (HOST_PROFILES,
+                                      host_profile_for_endpoint)
+from repro.core.carbon.field import CarbonField, default_field
+from repro.core.carbon.path import NetworkPath, discover_path
+from repro.core.carbon.score import TransferLedger
+from repro.core.controlplane.events import (EventLoop, ForecastShock,
+                                            JobArrival, JobComplete,
+                                            JobReady, MigrationCheck,
+                                            ReplanTick, StepTick)
+from repro.core.scheduler.overlay import (FTN, MigrationEvent,
+                                          OverlayScheduler)
+from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob
+from repro.core.scheduler.queue import CarbonAwareQueue
+from repro.core.transfer.engine import TransferEngine, TransferState
+
+
+@dataclasses.dataclass
+class _JobRecord:
+    """Mutable per-job state, from admission to the report row."""
+    job: TransferJob
+    plan: Plan                          # latest (re-)plan; what dispatch uses
+    admitted_plan: Plan
+    state: Optional[TransferState] = None
+    ledger: Optional[TransferLedger] = None
+    source: str = ""
+    current_ftn: Optional[FTN] = None
+    paths: Tuple[NetworkPath, ...] = ()
+    base_gbps: float = 0.0
+    power_fn: Optional[Callable[[float], float]] = None  # gbps -> watts
+    # (gbps, t) -> (total watts, gCO2/s): hop-resolved emission rate
+    rate_fn: Optional[Callable[[float, float], Tuple[float, float]]] = None
+    power_segments: List[Tuple[float, Callable[[float], float]]] = \
+        dataclasses.field(default_factory=list)  # (t_from, power_fn) history
+    dispatch_t: float = 0.0
+    completed_t: Optional[float] = None
+    actual_g: float = 0.0
+    bytes_wire: float = 0.0             # cumulative bytes on the wire
+    migrations: int = 0
+    replanned: bool = False
+    sla_miss: bool = False
+    ftn_sequence: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class JobOutcome:
+    """One FleetReport row: what was promised vs what happened."""
+    job_uuid: str
+    source: str
+    ftn_sequence: Tuple[str, ...]
+    start_t: float
+    completed_t: float
+    planned_emissions_g: float
+    actual_emissions_g: float
+    planned_duration_s: float
+    actual_duration_s: float
+    migrations: int
+    replanned: bool
+    sla_miss: bool
+    feasible: bool
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Fleet-level accounting for one controller run.
+
+    ``total_actual_g`` is accumulated step-by-step during the run;
+    ``ledger_total_g`` re-integrates every job's :class:`TransferLedger`
+    after the fact — the two must agree (the example asserts within 5%),
+    which catches dropped samples or double counting across migrations.
+    """
+    outcomes: List[JobOutcome]
+    n_jobs: int
+    n_completed: int
+    total_planned_g: float
+    total_actual_g: float
+    ledger_total_g: float
+    migrations: int
+    replan_events: int
+    plans_changed: int
+    sla_misses: int
+    n_events: int
+    n_steps: int
+    sim_span_s: float
+    wall_s: float
+    jobs_per_s: float
+
+    def summary(self) -> str:
+        dev = (self.total_actual_g / self.total_planned_g - 1.0) * 100 \
+            if self.total_planned_g else 0.0
+        return (
+            f"fleet: {self.n_completed}/{self.n_jobs} jobs in "
+            f"{self.sim_span_s / 3600:.1f} simulated h "
+            f"({self.wall_s:.1f} s wall, {self.jobs_per_s:.0f} jobs/s)\n"
+            f"emissions: planned {self.total_planned_g / 1000:.1f} kg, "
+            f"actual {self.total_actual_g / 1000:.1f} kg ({dev:+.1f}%), "
+            f"ledger audit {self.ledger_total_g / 1000:.1f} kg\n"
+            f"adaptation: {self.migrations} migrations, "
+            f"{self.replan_events} re-plan sweeps "
+            f"({self.plans_changed} plans changed), "
+            f"{self.sla_misses} SLA misses\n"
+            f"runtime: {self.n_events} events, {self.n_steps} engine steps")
+
+
+class FleetController:
+    """Event-driven fleet runtime over planner + queue + engine + overlay.
+
+    Policies are plain methods keyed by event type (see ``_HANDLERS``); to
+    add one, define an ``Event`` subclass, push it, and register a handler —
+    the ROADMAP architecture notes walk through an example.
+    """
+
+    def __init__(self, ftns: Sequence[FTN], *,
+                 planner: Optional[CarbonPlanner] = None,
+                 engine: Optional[TransferEngine] = None,
+                 field: Optional[CarbonField] = None,
+                 replan_every_s: float = 3600.0,
+                 migrate_check_every_s: float = 900.0,
+                 migration_threshold: float = 400.0,
+                 hysteresis: float = 0.9,
+                 drift_tol: float = 0.05,
+                 max_migrations_per_job: int = 4):
+        self.field = field or default_field()
+        self.ftns = list(ftns)
+        self._ftn_by_name = {f.name: f for f in self.ftns}
+        self.planner = planner or CarbonPlanner(self.ftns, field=self.field)
+        # re-plans during a shock see the drift: the planner's forecast
+        # emission integral is scaled by the measured zone factors
+        # (persistence nowcast over the shock window)
+        self.planner.emission_scale_fn = self._emission_scale
+        self.events = EventLoop()
+        self.queue = CarbonAwareQueue(self.planner, events=self.events)
+        # one ThroughputModel: completions observed by the engine feed the
+        # planner's next predictions
+        self.engine = engine or TransferEngine(
+            model=self.planner.throughput, field=self.field)
+        self.overlay = OverlayScheduler(self.ftns,
+                                        threshold=migration_threshold,
+                                        hysteresis=hysteresis)
+        self.replan_every_s = replan_every_s
+        self.migrate_check_every_s = migrate_check_every_s
+        self.drift_tol = drift_tol
+        self.max_migrations_per_job = max_migrations_per_job
+        self._records: Dict[str, _JobRecord] = {}
+        self._active: Dict[str, _JobRecord] = {}
+        self._shocks: List[ForecastShock] = []
+        self._outstanding = 0
+        self._ticks_armed = False
+        self._t_first: Optional[float] = None
+        self._t_last = 0.0
+        self.migrations = 0
+        self.replan_events = 0
+        self.plans_changed = 0
+        self.sla_misses = 0
+        self.n_steps = 0
+        self.n_events = 0
+
+    # --- submission / drift injection --------------------------------------
+    def submit(self, job: TransferJob) -> None:
+        self._outstanding += 1
+        self.events.push(JobArrival(t=max(job.submitted_t, self.events.now),
+                                    job=job))
+
+    def submit_many(self, jobs: Sequence[TransferJob]) -> None:
+        for job in jobs:
+            self.submit(job)
+
+    def inject_shock(self, t: float, factor: float, *,
+                     duration_s: float = float("inf"),
+                     zones: Optional[Sequence[str]] = None) -> None:
+        """Schedule a CI drift: measured CI of paths crossing ``zones``
+        becomes ``factor`` x the forecast trace for ``duration_s``."""
+        self.events.push(ForecastShock(
+            t=t, factor=factor, until=t + duration_s,
+            zones=tuple(zones) if zones is not None else None))
+
+    # --- measured CI (forecast trace x active shocks) -----------------------
+    def _zone_factor(self, zone: str, t: float) -> float:
+        f = 1.0
+        for s in self._shocks:
+            if s.t - 1e-9 <= t <= s.until and (s.zones is None
+                                               or zone in s.zones):
+                f *= s.factor
+        return f
+
+    def _emission_scale(self, path: NetworkPath,
+                        ts: "np.ndarray") -> "np.ndarray":
+        """Planner drift hook: per-start-slot multiplier on a leg's
+        forecast emissions — the hop-mean of the active zone shock factors
+        for starts inside a shock window (a coarse persistence nowcast;
+        the hop-resolved truth is what the controller then measures)."""
+        scale = np.ones(np.shape(ts))
+        for s in self._shocks:
+            zf = [s.factor if (s.zones is None or h.zone in s.zones)
+                  else 1.0 for h in path.hops]
+            f_path = sum(zf) / len(zf)
+            if f_path != 1.0:
+                scale = np.where((ts >= s.t - 1e-9) & (ts <= s.until),
+                                 scale * f_path, scale)
+        return scale
+
+    def _zone_scale_at(self, t: float
+                       ) -> Optional[Callable[[str], float]]:
+        """zone -> shock multiplier hook at time t (None when no shock)."""
+        if not self._shocks:
+            return None
+        return lambda zone: self._zone_factor(zone, t)
+
+    def measured_path_ci(self, path: NetworkPath, t: float) -> float:
+        """What the in-flight transfer actually sees: the forecast trace with
+        any active shock applied *per shocked zone* (hops in clean zones
+        keep their forecast CI — a drift in MISO does not dirty NYISO)."""
+        return self.field.path_ci_scalar(path, t,
+                                         zone_scale=self._zone_scale_at(t))
+
+    def _observed_ci(self, rec: _JobRecord, t: float) -> float:
+        tot = sum(self.measured_path_ci(p, t) for p in rec.paths)
+        return tot / max(len(rec.paths), 1)
+
+    # --- the loop -----------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> FleetReport:
+        wall0 = time.perf_counter()
+        while True:
+            ev = self.events.pop()
+            if ev is None or (until is not None and ev.t > until):
+                break
+            self.n_events += 1
+            if self._t_first is None:
+                self._t_first = ev.t
+            self._t_last = max(self._t_last, ev.t)
+            self._HANDLERS[type(ev)](self, ev)
+        return self._report(time.perf_counter() - wall0)
+
+    def _arm_ticks(self, t: float) -> None:
+        if not self._ticks_armed:
+            self._ticks_armed = True
+            self.events.push(ReplanTick(t=t + self.replan_every_s))
+            self.events.push(MigrationCheck(t=t + self.migrate_check_every_s))
+
+    # --- handlers -----------------------------------------------------------
+    def _on_arrival(self, ev: JobArrival) -> None:
+        self._arm_ticks(ev.t)
+        plan = self.queue.submit(ev.job)
+        self._records[ev.job.uuid] = _JobRecord(
+            job=ev.job, plan=plan, admitted_plan=plan)
+
+    def _on_ready(self, ev: JobReady) -> None:
+        self.queue.claim(ev)
+        rec = self._records[ev.job.uuid]
+        if (ev.plan.source, ev.plan.ftn, ev.plan.start_t) != (
+                rec.admitted_plan.source, rec.admitted_plan.ftn,
+                rec.admitted_plan.start_t):
+            rec.replanned = True
+        rec.plan = ev.plan
+        self._dispatch(rec, ev.t)
+
+    def _dispatch(self, rec: _JobRecord, t: float) -> None:
+        job, plan = rec.job, rec.plan
+        rec.source = plan.source
+        rec.current_ftn = self._ftn_by_name.get(plan.ftn)
+        rec.dispatch_t = t
+        rec.ftn_sequence = (plan.ftn,)
+        rec.ledger = TransferLedger(job.uuid)
+        rec.state = self.engine.start(
+            job.uuid, plan.source, plan.ftn, job.size_bytes, t,
+            parallelism=job.parallelism, concurrency=job.concurrency,
+            pipelining=job.pipelining)
+        self._reroute(rec, t)
+        self._active[job.uuid] = rec
+        self.events.push(StepTick(t=t, job_uuid=job.uuid))
+
+    def _route_for(self, job: TransferJob, source: str,
+                   ftn: Optional[FTN], relay_node: str
+                   ) -> Tuple[Tuple[NetworkPath, ...], float,
+                              Callable[[float], float],
+                              Callable[[float, float], Tuple[float, float]],
+                              bool]:
+        """(paths, bottleneck gbps, gbps->watts power model,
+        (gbps, t)->(watts, gCO2/s) measured emission rate, and whether the
+        first leg's own prediction binds the rate) for running ``job`` as
+        source -> relay_node [-> job.dst] — shared by dispatch,
+        post-migration rerouting and the migration emission guard."""
+        legs: List[Tuple[str, str]] = [(source, relay_node)]
+        if relay_node != job.dst:
+            legs.append((relay_node, job.dst))
+        paths = tuple(discover_path(a, b) for a, b in legs)
+        leg_gbps = [self.engine.model.predict(a, b, job.parallelism,
+                                              job.concurrency)
+                    for a, b in legs]
+        base = min(leg_gbps)
+        if ftn is not None:
+            base = min(base, ftn.max_gbps)
+        # the achieved rate teaches the model about (source, relay) only
+        # when that leg is what bound it — an FTN NIC cap or a slow second
+        # leg says nothing about the pair and would poison the correction
+        leg1_binds = base >= leg_gbps[0] - 1e-12
+        relay_pm = (ftn.power_model if ftn is not None
+                    else host_profile_for_endpoint(relay_node))
+        sender_pm = HOST_PROFILES[self.engine.src_profile]
+        receivers = [relay_pm] if len(paths) == 1 else \
+            [relay_pm, host_profile_for_endpoint(job.dst)]
+        senders = [sender_pm] if len(paths) == 1 else [sender_pm, relay_pm]
+
+        def power_fn(gbps: float, _paths=paths, _s=senders, _r=receivers,
+                     _par=job.parallelism, _con=job.concurrency) -> float:
+            return sum(self.field.path_power_w(p, s, r, gbps,
+                                               parallelism=_par,
+                                               concurrency=_con)
+                       for p, s, r in zip(_paths, _s, _r))
+
+        def rate_fn(gbps: float, t: float, _paths=paths, _s=senders,
+                    _r=receivers, _par=job.parallelism,
+                    _con=job.concurrency) -> Tuple[float, float]:
+            """(total watts, gCO2/s) at the *measured* per-hop CI — the
+            same device-power x device-CI product the planner integrates,
+            so planned-vs-actual deviations mean drift, not model skew."""
+            scale = self._zone_scale_at(t)
+            w_tot, rate = 0.0, 0.0
+            for p, s, r in zip(_paths, _s, _r):
+                w = self.field._device_weights(p, s, r, gbps, _par, _con)
+                w_tot += float(w.sum())
+                rate += self.field.path_device_rate_scalar(
+                    p, w, t, zone_scale=scale)
+            return w_tot, rate / 3.6e6
+
+        return paths, base, power_fn, rate_fn, leg1_binds
+
+    def _reroute(self, rec: _JobRecord, t: float) -> None:
+        """(Re)derive paths, bottleneck rate and device power for the
+        current route — on dispatch and after every migration."""
+        paths, base, power_fn, rate_fn, leg1_binds = self._route_for(
+            rec.job, rec.state.src, rec.current_ftn, rec.state.dst)
+        rec.paths, rec.base_gbps = paths, base
+        rec.power_fn, rec.rate_fn = power_fn, rate_fn
+        rec.state.observe_on_finish = leg1_binds
+        rec.power_segments.append((t, power_fn))
+
+    def _on_step(self, ev: StepTick) -> None:
+        rec = self._active.get(ev.job_uuid)
+        if rec is None:
+            return
+        st = rec.state
+        obs = self.engine.step(st, path=rec.paths[0],
+                               base_gbps=rec.base_gbps)
+        self.n_steps += 1
+        w_tot, g_per_s = rec.rate_fn(obs.gbps, st.t_now)
+        rec.actual_g += g_per_s * obs.step_s
+        rec.bytes_wire += obs.bytes_delta
+        # ledger CI is the power-weighted effective CI, so re-integrating
+        # the ledger (power x ci x dt) reproduces the step accounting
+        rec.ledger.record(st.t_now, rec.bytes_wire,
+                          g_per_s * 3.6e6 / max(w_tot, 1e-9), obs.gbps)
+        if obs.finished:
+            self._complete(rec, st.t_now)
+        else:
+            self.events.push(StepTick(t=st.t_now, job_uuid=ev.job_uuid))
+
+    def _complete(self, rec: _JobRecord, t: float) -> None:
+        del self._active[rec.job.uuid]
+        rec.completed_t = t
+        deadline = rec.job.submitted_t + rec.job.sla.deadline_s
+        rec.sla_miss = t > deadline + 1e-6
+        if rec.sla_miss:
+            self.sla_misses += 1
+        self._outstanding -= 1
+        self.events.push(JobComplete(t=t, job_uuid=rec.job.uuid))
+
+    def _on_complete(self, ev: JobComplete) -> None:
+        """Bookkeeping marker; policies that react to completions (e.g.
+        backfill admission) hook here."""
+
+    def _on_replan(self, ev: ReplanTick) -> None:
+        if len(self.queue):
+            changed = self.queue.replan_pending(ev.t,
+                                                drift_tol=self.drift_tol)
+            self.replan_events += 1
+            self.plans_changed += changed
+        if self._outstanding > 0:
+            self.events.push(ReplanTick(t=ev.t + self.replan_every_s))
+        else:
+            self._ticks_armed = False
+
+    def _on_migration_check(self, ev: MigrationCheck) -> None:
+        """The §4.3 migration decision as a controller policy: the overlay's
+        CI threshold detects drift on the *measured* route, but the target is
+        chosen by projected remaining emissions over each candidate's full
+        route (end-system power is idle-dominated, so a CI-only ranking can
+        hand the job to a node that multiplies energy by its slowdown). A
+        hand-off must cut projected remaining gCO2 by the overlay's
+        hysteresis margin and still meet the SLA deadline."""
+        for uuid, rec in list(self._active.items()):
+            if rec.current_ftn is None:
+                continue               # infeasible fallback runs direct
+            if rec.migrations >= self.max_migrations_per_job:
+                continue               # no hand-off thrash under long drift
+            ci = self._observed_ci(rec, ev.t)
+            if ci <= self.overlay.threshold:
+                continue
+            deadline_t = rec.job.submitted_t + rec.job.sla.deadline_s
+            rem_bits = rec.state.remaining * 8.0
+            g_stay = rec.rate_fn(rec.base_gbps, ev.t)[1] \
+                * rem_bits / (rec.base_gbps * 1e9)
+            best = None                # (g_move, ftn)
+            for ftn in self.ftns:
+                if ftn.name == rec.current_ftn.name:
+                    continue
+                _, base, _, rate, _ = self._route_for(rec.job, rec.source,
+                                                      ftn, ftn.name)
+                rem_s = rem_bits / (base * 1e9)
+                if rec.state.t_now + rem_s > deadline_t + 1e-6:
+                    continue           # greener-but-late violates the SLA
+                g_move = rate(base, ev.t)[1] * rem_s
+                if best is None or g_move < best[0]:
+                    best = (g_move, ftn)
+            if best is None or best[0] >= self.overlay.hysteresis * g_stay:
+                continue
+            g_move, ftn = best
+            self.overlay.events.append(MigrationEvent(
+                t=ev.t, from_ftn=rec.current_ftn.name, to_ftn=ftn.name,
+                bytes_done=rec.state.bytes_done, ci_at_migration=ci))
+            token = rec.state.checkpoint()
+            rec.migrations += 1
+            self.migrations += 1
+            rec.current_ftn = ftn
+            rec.ftn_sequence += (ftn.name,)
+            rec.state = self.engine.start(
+                uuid, rec.source, ftn.name, rec.job.size_bytes,
+                rec.state.t_now, parallelism=rec.job.parallelism,
+                concurrency=rec.job.concurrency,
+                pipelining=rec.job.pipelining, resume=token)
+            self._reroute(rec, rec.state.t_now)
+        if self._outstanding > 0:
+            self.events.push(
+                MigrationCheck(t=ev.t + self.migrate_check_every_s))
+        else:
+            self._ticks_armed = False
+
+    def _on_shock(self, ev: ForecastShock) -> None:
+        self._shocks.append(ev)
+        # forecast drift: full re-plan of everything still queued, now
+        if len(self.queue):
+            changed = self.queue.replan_pending(ev.t, drift_tol=None)
+            self.replan_events += 1
+            self.plans_changed += changed
+
+    _HANDLERS = {
+        JobArrival: _on_arrival,
+        JobReady: _on_ready,
+        StepTick: _on_step,
+        JobComplete: _on_complete,
+        ReplanTick: _on_replan,
+        MigrationCheck: _on_migration_check,
+        ForecastShock: _on_shock,
+    }
+
+    # --- reporting ----------------------------------------------------------
+    def _ledger_emissions_g(self, rec: _JobRecord) -> float:
+        """Re-integrate a job's ledger samples against its route power
+        history — the after-the-fact audit of the step accumulator."""
+        if rec.ledger is None:
+            return 0.0
+        g, prev_t, seg = 0.0, rec.dispatch_t, 0
+        segs = rec.power_segments
+        for s in rec.ledger.samples:
+            while seg + 1 < len(segs) and segs[seg + 1][0] <= prev_t + 1e-9:
+                seg += 1
+            g += segs[seg][1](s.throughput_gbps) * s.ci \
+                * (s.t - prev_t) / 3.6e6
+            prev_t = s.t
+        return g
+
+    def _report(self, wall_s: float) -> FleetReport:
+        outcomes = []
+        total_planned = total_actual = ledger_total = 0.0
+        n_completed = 0
+        for rec in self._records.values():
+            done = rec.completed_t is not None
+            if done:
+                n_completed += 1
+            total_planned += rec.plan.predicted_emissions_g \
+                if rec.plan.feasible else 0.0
+            total_actual += rec.actual_g
+            ledger_total += self._ledger_emissions_g(rec)
+            outcomes.append(JobOutcome(
+                job_uuid=rec.job.uuid, source=rec.source,
+                ftn_sequence=rec.ftn_sequence,
+                start_t=rec.dispatch_t,
+                completed_t=rec.completed_t if done else float("nan"),
+                planned_emissions_g=rec.plan.predicted_emissions_g,
+                actual_emissions_g=rec.actual_g,
+                planned_duration_s=rec.plan.predicted_duration_s,
+                actual_duration_s=(rec.completed_t - rec.dispatch_t)
+                if done else float("nan"),
+                migrations=rec.migrations, replanned=rec.replanned,
+                sla_miss=rec.sla_miss, feasible=rec.plan.feasible))
+        span = (self._t_last - self._t_first) if self._t_first is not None \
+            else 0.0
+        return FleetReport(
+            outcomes=outcomes, n_jobs=len(self._records),
+            n_completed=n_completed, total_planned_g=total_planned,
+            total_actual_g=total_actual, ledger_total_g=ledger_total,
+            migrations=self.migrations, replan_events=self.replan_events,
+            plans_changed=self.plans_changed, sla_misses=self.sla_misses,
+            n_events=self.n_events, n_steps=self.n_steps,
+            sim_span_s=span, wall_s=wall_s,
+            jobs_per_s=n_completed / wall_s if wall_s > 0 else 0.0)

@@ -1,0 +1,163 @@
+"""Jit-compiled planner grid scoring on the jnp backend (ROADMAP open item).
+
+The planner's inner loop scores every candidate start slot of a (FTN x
+replica) leg by integrating the per-hop emission rate r(t) = sum_dev
+P_dev * CI_dev(t) / 3.6e6 over the transfer window. On the numpy backend
+that evaluation goes through ``CarbonField._hop_ci_grid``; here the same
+quantity is computed by a ``jax.jit``-compiled kernel built on the
+``make_window`` / ``window_ci`` dense view: all blake2b noise is hashed
+once into (zone x hour) and (hop x hour) arrays at window-build time, and
+the jitted function is pure array math.
+
+Design notes for jit stability:
+
+* windows are anchored per *path* at an hour boundary with a generous
+  horizon, so ``window_ci``'s host-side time constants (``t0``-derived)
+  stay static across a planning session — recompiles happen per path, not
+  per job;
+* grid lengths are padded to coarse buckets so shape-driven recompiles are
+  bounded;
+* the f32 per-step rate is promoted to f64 on the host for the prefix-sum
+  gathers, so integration error stays at the per-element level (~1e-6).
+
+The numpy path (``CarbonField.transfer_emissions_g``) is the pinned oracle:
+``CarbonPlanner(backend="jax")`` must agree with ``backend="numpy"`` to
+~1e-4 relative (f32 CI evaluation), asserted by the test suite.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.carbon.energy import HostPowerModel
+from repro.core.carbon.field import (CarbonField, CarbonWindow, default_field,
+                                     make_window, window_ci)
+from repro.core.carbon.path import NetworkPath
+
+try:                                   # gate: jax is optional at runtime
+    import jax
+    import jax.numpy as jnp
+    HAVE_JAX = True
+except Exception:                      # pragma: no cover - env without jax
+    jax, jnp = None, None
+    HAVE_JAX = False
+
+_WINDOW_HOURS = 24 * 14                # per-anchor horizon (2 weeks)
+_GRID_BUCKET = 512                     # rate-grid length rounding
+
+
+class _PathWindow:
+    """Dense, jit-ready view of one path over [t0, t0 + hours h): the zone
+    window plus the per-hop sub-metering band and hourly noise that turn
+    zone CI into device CI (``CarbonField.hop_ci_matrix`` semantics)."""
+
+    def __init__(self, field: CarbonField, path: NetworkPath, t0: float,
+                 hours: int):
+        zones = tuple(dict.fromkeys(h.zone for h in path.hops))
+        self.window: CarbonWindow = make_window(zones, t0, hours, field)
+        self.t0, self.hours = float(t0), int(hours)
+        self.zone_idx = np.array([zones.index(h.zone) for h in path.hops],
+                                 dtype=np.int32)
+        self.hop_band = np.array([field._hop_band(h.ip) for h in path.hops])
+        hour0 = int(t0 // 3600.0)
+        hour_idx = np.arange(hour0, hour0 + hours)
+        self.hop_noise = np.stack(
+            [field._hop_noise.lookup(h.ip, hour_idx) - 0.5
+             for h in path.hops])
+
+    def covers(self, t_lo: float, t_hi: float) -> bool:
+        return (t_lo >= self.t0
+                and t_hi <= self.t0 + 3600.0 * self.hours - 1e-6)
+
+
+def _make_rate_fn(window: CarbonWindow):
+    """Jitted emission-rate kernel for one window anchor. ``window``'s time
+    constants are closed over (static); all per-call arrays are traced."""
+
+    def rate(base, amp, dip, namp, peak, znoise, zone_idx, hop_band,
+             hop_noise, w_dev, rel_ts):
+        w = CarbonWindow(zones=window.zones, t0=window.t0,
+                         hours=window.hours, base=base, amp=amp, dip=dip,
+                         noise_amp=namp, peak=peak, noise=znoise,
+                         cal_a=window.cal_a, cal_b=window.cal_b)
+        zci = window_ci(w, zone_idx[:, None], rel_ts[None, :], xp=jnp)
+        hour_frac = window.t0 - 3600.0 * math.floor(window.t0 / 3600.0)
+        hour_rel = jnp.clip(
+            jnp.floor((rel_ts + hour_frac) / 3600.0).astype(jnp.int32),
+            0, window.hours - 1)
+        band = (1.0 + 0.02 * hop_band[:, None]
+                + 0.005 * hop_noise[:, hour_rel])
+        return (w_dev @ (zci * band)) / 3.6e6
+
+    return jax.jit(rate)
+
+
+class JaxGridScorer:
+    """Per-planner cache of path windows + compiled rate kernels."""
+
+    def __init__(self, field: Optional[CarbonField] = None):
+        if not HAVE_JAX:
+            raise ImportError(
+                "CarbonPlanner(backend='jax') needs jax; install it or use "
+                "backend='numpy' (the pinned oracle)")
+        self.field = field or default_field()
+        self._windows: Dict[Tuple, _PathWindow] = {}
+        self._rate_fns: Dict[Tuple, object] = {}
+
+    def _path_window(self, path: NetworkPath, t_lo: float,
+                     t_hi: float) -> _PathWindow:
+        key = (path.src, path.dst, path.hops)
+        pw = self._windows.get(key)
+        if pw is None or not pw.covers(t_lo, t_hi):
+            t0 = 3600.0 * math.floor(t_lo / 3600.0)
+            hours = max(int(math.ceil((t_hi - t0) / 3600.0)) + 1,
+                        _WINDOW_HOURS)
+            hours = int(math.ceil(hours / _WINDOW_HOURS)) * _WINDOW_HOURS
+            pw = _PathWindow(self.field, path, t0, hours)
+            self._windows[key] = pw
+            # anchor changed: the closed-over time constants did too
+            self._rate_fns.pop(key, None)
+        return pw
+
+    def leg_emissions_g(self, path: NetworkPath, sender: HostPowerModel,
+                        receiver: HostPowerModel, bytes_moved: float,
+                        t0s: np.ndarray, throughput_gbps: float, *,
+                        parallelism: int = 1, concurrency: int = 1,
+                        dt_s: float = 60.0) -> np.ndarray:
+        """``CarbonField.transfer_emissions_g`` for slot-aligned starts, with
+        the O(hops x grid) rate evaluation under ``jax.jit``."""
+        t0s = np.atleast_1d(np.asarray(t0s, dtype=np.float64))
+        if throughput_gbps <= 0:
+            return np.full(t0s.shape, np.inf)
+        duration_s = bytes_moved * 8.0 / (throughput_gbps * 1e9)
+        n_steps = max(int(math.ceil(duration_s / dt_s - 1e-12)), 1)
+        rem = duration_s - (n_steps - 1) * dt_s
+        offsets = (t0s - t0s.min()) / dt_s
+        k = np.rint(offsets).astype(np.int64)
+        if offsets.size and np.max(np.abs(offsets - k)) >= 1e-9:
+            # unaligned starts: stay on the numpy oracle (rare; the planner
+            # slot scan is always grid-aligned)
+            return self.field.transfer_emissions_g(
+                path, sender, receiver, bytes_moved, t0s, throughput_gbps,
+                parallelism=parallelism, concurrency=concurrency, dt_s=dt_s)
+        n_grid = int(k.max()) + n_steps
+        n_pad = int(math.ceil(n_grid / _GRID_BUCKET)) * _GRID_BUCKET
+        pw = self._path_window(path, float(t0s.min()),
+                               float(t0s.min()) + n_pad * dt_s)
+        key = (path.src, path.dst, path.hops)
+        fn = self._rate_fns.get(key)
+        if fn is None:
+            fn = self._rate_fns[key] = _make_rate_fn(pw.window)
+        w_dev = self.field._device_weights(path, sender, receiver,
+                                           throughput_gbps, parallelism,
+                                           concurrency)
+        rel = (float(t0s.min()) - pw.t0) + dt_s * np.arange(n_pad)
+        w = pw.window
+        r = np.asarray(fn(w.base, w.amp, w.dip, w.noise_amp, w.peak, w.noise,
+                          pw.zone_idx, pw.hop_band, pw.hop_noise, w_dev,
+                          rel), dtype=np.float64)
+        prefix = np.concatenate([[0.0], np.cumsum(r[:n_grid])])
+        full = (prefix[k + n_steps - 1] - prefix[k]) * dt_s
+        return full + r[k + n_steps - 1] * rem

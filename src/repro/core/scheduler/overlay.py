@@ -76,11 +76,17 @@ class OverlayScheduler:
     events: List[MigrationEvent] = dataclasses.field(default_factory=list)
 
     def maybe_migrate(self, *, source: str, current: FTN, t: float,
-                      current_ci: float, bytes_done: float
+                      current_ci: float, bytes_done: float,
+                      ci_fn: Optional[Callable[[NetworkPath, float],
+                                               float]] = None
                       ) -> Optional[FTNChoice]:
+        """``ci_fn`` lets the control plane rank alternatives under the
+        *measured* (drifted) CI rather than the forecast trace, so a shock
+        that trips the threshold does not hand the job to an equally
+        shocked FTN."""
         if current_ci <= self.threshold:
             return None
-        choice = best_ftn(self.ftns, source, t)
+        choice = best_ftn(self.ftns, source, t, ci_fn=ci_fn)
         if (choice.ftn.name != current.name
                 and choice.expected_ci < self.hysteresis * current_ci):
             self.events.append(MigrationEvent(

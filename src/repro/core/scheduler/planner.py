@@ -88,12 +88,47 @@ class CarbonPlanner:
                  throughput: Optional[ThroughputModel] = None,
                  slot_s: float = 3600.0,
                  ci_fn: Optional[Callable[[NetworkPath, float], float]] = None,
-                 field: Optional[CarbonField] = None):
+                 field: Optional[CarbonField] = None,
+                 backend: str = "numpy"):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"backend must be 'numpy' or 'jax', got "
+                             f"{backend!r}")
         self.ftns = list(ftns)
+        self._ftn_by_name = {f.name: f for f in self.ftns}
         self.throughput = throughput or ThroughputModel()
         self.slot_s = slot_s
         self.ci_fn = ci_fn             # forecast hook; None = oracle trace
         self.field = field or default_field()
+        self.backend = backend
+        self._jax_scorer = None
+        if backend == "jax":
+            from repro.core.scheduler.grid_jax import JaxGridScorer
+            self._jax_scorer = JaxGridScorer(self.field)
+        # drift hook (the fleet controller's forecast-shock nowcast): a
+        # (path, start_times) -> multiplier-array applied to the forecast
+        # emission integral, so re-plans during measured CI drift can
+        # route around it instead of re-deriving the same shocked plan
+        self.emission_scale_fn: Optional[
+            Callable[[NetworkPath, np.ndarray], np.ndarray]] = None
+
+    def _leg_emissions(self, path: NetworkPath, receiver, job: TransferJob,
+                       ts: np.ndarray, gbps: float) -> np.ndarray:
+        """Emission integral for one leg over all candidate starts — the
+        grid-scoring hot path, dispatched by backend (numpy is the pinned
+        oracle; jax runs the same integral jit-compiled on jnp)."""
+        if self._jax_scorer is not None:
+            emis = self._jax_scorer.leg_emissions_g(
+                path, HOST_PROFILES["storage_frontend"], receiver,
+                job.size_bytes, ts, gbps,
+                parallelism=job.parallelism, concurrency=job.concurrency)
+        else:
+            emis = self.field.transfer_emissions_g(
+                path, HOST_PROFILES["storage_frontend"], receiver,
+                job.size_bytes, ts, gbps,
+                parallelism=job.parallelism, concurrency=job.concurrency)
+        if self.emission_scale_fn is not None:
+            emis = emis * self.emission_scale_fn(path, np.atleast_1d(ts))
+        return emis
 
     def _ci(self, path: NetworkPath, t0: float, dur: float) -> float:
         if self.ci_fn is not None:
@@ -147,10 +182,7 @@ class CarbonPlanner:
             ci_acc = np.zeros(ts.shape)
             for (a, b) in legs:
                 p = discover_path(a, b)
-                emis += self.field.transfer_emissions_g(
-                    p, HOST_PROFILES["storage_frontend"], ftn.power_model,
-                    job.size_bytes, ts, gbps,
-                    parallelism=job.parallelism, concurrency=job.concurrency)
+                emis += self._leg_emissions(p, ftn.power_model, job, ts, gbps)
                 ci_acc += self._ci_vec(p, ts, dur)
             avg_ci = ci_acc / len(legs)
             feasible = ts + dur <= deadline_t + 1e-9
@@ -175,11 +207,73 @@ class CarbonPlanner:
             return self._fallback(job, n_alt)
         return dataclasses.replace(best, alternatives=n_alt)
 
-    def plan_batch(self, jobs: Sequence[TransferJob]) -> List[Plan]:
+    def plan_batch(self, jobs: Sequence[TransferJob],
+                   previous: Optional[Sequence[Optional[Plan]]] = None,
+                   drift_tol: Optional[float] = None) -> List[Plan]:
         """Fleet-scale planning: one call, shared caches. The first plan
         warms the path/noise/trace caches; the rest reuse them, so per-job
-        cost is dominated by the array ops alone."""
-        return [self.plan(job) for job in jobs]
+        cost is dominated by the array ops alone.
+
+        Incremental mode (the control plane's forecast-drift path): with
+        ``previous`` plans and a ``drift_tol``, each job's old grid cell is
+        first re-scored under current conditions; if it is still feasible
+        and its predicted *emissions* moved by at most ``drift_tol``
+        (relative), the job keeps its cell without a full grid scan —
+        O(1 cell) instead of O(FTN x replica x slot). Emissions, not cost,
+        is the drift metric: the w_perf term is measured from the job's
+        submission base, which a queue rebase shifts without any real
+        change in conditions. ``drift_tol=0.0`` degenerates to a full
+        re-plan of every job whose conditions changed at all.
+        """
+        if previous is None or drift_tol is None:
+            return [self.plan(job) for job in jobs]
+        out: List[Plan] = []
+        for job, prev in zip(jobs, previous):
+            re = self.rescore(job, prev) if prev is not None else None
+            if (re is not None and re.feasible
+                    and abs(re.predicted_emissions_g
+                            - prev.predicted_emissions_g)
+                    <= drift_tol * max(prev.predicted_emissions_g, 1e-12)):
+                out.append(re)
+            else:
+                out.append(self.plan(job))
+        return out
+
+    def rescore(self, job: TransferJob, prev: Plan) -> Optional[Plan]:
+        """Re-evaluate one existing plan's (source, FTN, start) cell under
+        current forecasts/throughput. Returns the refreshed Plan (possibly
+        infeasible), or None when the cell no longer exists — start slot in
+        the past, unknown FTN (the infeasible fallback's pseudo-cell) — in
+        which case the caller must run a full :meth:`plan`."""
+        ftn = self._ftn_by_name.get(prev.ftn)
+        if ftn is None or prev.start_t < job.submitted_t - 1e-9:
+            return None
+        deadline_t = job.submitted_t + job.sla.deadline_s
+        legs = [(prev.source, ftn.name)]
+        if ftn.name != job.dst:
+            legs.append((ftn.name, job.dst))
+        gbps = min(self.throughput.predict(a, b, job.parallelism,
+                                           job.concurrency)
+                   for a, b in legs)
+        gbps = min(gbps, ftn.max_gbps)
+        dur = job.size_bytes * 8.0 / (gbps * 1e9)
+        ts = np.array([prev.start_t])
+        emis = np.zeros(1)
+        for (a, b) in legs:
+            p = discover_path(a, b)
+            emis += self._leg_emissions(p, ftn.power_model, job, ts, gbps)
+        feasible = prev.start_t + dur <= deadline_t + 1e-9
+        if job.sla.carbon_budget_g is not None:
+            feasible = feasible and float(emis[0]) <= job.sla.carbon_budget_g
+        cost = float(_plan_cost(job.sla, float(emis[0]),
+                                prev.start_t + dur - job.submitted_t))
+        # the avg-CI/carbonscore annotations are kept from the previous
+        # plan: they do not enter the cost, and re-sampling them would cost
+        # more than the whole O(1) re-score
+        return dataclasses.replace(
+            prev, predicted_gbps=gbps, predicted_duration_s=dur,
+            predicted_emissions_g=float(emis[0]),
+            cost=cost, feasible=bool(feasible))
 
     # --- scalar reference oracle ------------------------------------------
     def plan_reference(self, job: TransferJob) -> Plan:

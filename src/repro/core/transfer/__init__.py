@@ -1,6 +1,6 @@
 from repro.core.transfer.throughput import ThroughputModel
-from repro.core.transfer.engine import TransferEngine, TransferState
+from repro.core.transfer.engine import StepObs, TransferEngine, TransferState
 from repro.core.transfer.migrate import migrate_transfer
 
-__all__ = ["ThroughputModel", "TransferEngine", "TransferState",
+__all__ = ["ThroughputModel", "TransferEngine", "TransferState", "StepObs",
            "migrate_transfer"]

@@ -236,6 +236,52 @@ def test_noise_cache_survives_far_flung_queries():
     np.testing.assert_allclose(back, ref, rtol=RTOL)
 
 
+def test_scalar_fast_paths_match_array_oracle():
+    """The control plane's per-step scalar CI paths (zone_ci_scalar /
+    path_ci_scalar / hop_ci_scalar / path_device_rate_scalar /
+    path_power_w) must reproduce the array engine — the fast-path
+    contract applies to scalar shortcuts too."""
+    f = CarbonField()
+    p = discover_path("uc", "tacc")
+    ts = TS[::16]
+    for zone in REGIONS:
+        vec = f.zone_ci(zone, ts)
+        for t, v in zip(ts, vec):
+            assert f.zone_ci_scalar(zone, float(t)) == \
+                pytest.approx(float(v), rel=RTOL)
+    path_vec = f.path_ci(p, ts)
+    hop_mat = f.hop_ci_matrix(p, ts)
+    w = f._device_weights(p, HOST_PROFILES["storage_frontend"],
+                          HOST_PROFILES["cascade_lake"], 8.8, 4, 2)
+    for j, t in enumerate(ts):
+        t = float(t)
+        assert f.path_ci_scalar(p, t) == \
+            pytest.approx(float(path_vec[j]), rel=RTOL)
+        for i, h in enumerate(p.hops):
+            zci = f.zone_ci_scalar(h.zone, t)
+            assert f.hop_ci_scalar(h.ip, zci, t) == \
+                pytest.approx(float(hop_mat[i, j]), rel=RTOL)
+        assert f.path_device_rate_scalar(p, w, t) == \
+            pytest.approx(float(w @ hop_mat[:, j]), rel=RTOL)
+    assert f.path_power_w(p, HOST_PROFILES["storage_frontend"],
+                          HOST_PROFILES["cascade_lake"], 8.8,
+                          parallelism=4, concurrency=2) == \
+        pytest.approx(float(w.sum()), rel=RTOL)
+
+
+def test_scalar_fast_path_zone_scale_hook():
+    f = CarbonField()
+    p = discover_path("uc", "tacc")
+    t = float(T0 + 12 * 3600.0)
+    scale = lambda z: 2.0 if z == "US-MIDW-MISO" else 1.0  # noqa: E731
+    plain = {h.zone: f.zone_ci_scalar(h.zone, t) for h in p.hops}
+    counts = {z: sum(1 for h in p.hops if h.zone == z) for z in plain}
+    expect = sum(n * plain[z] * (2.0 if z == "US-MIDW-MISO" else 1.0)
+                 for z, n in counts.items()) / p.n_hops
+    assert f.path_ci_scalar(p, t, zone_scale=scale) == \
+        pytest.approx(expect, rel=RTOL)
+
+
 def test_queue_submit_many_matches_submit():
     from repro.core.scheduler.queue import CarbonAwareQueue
 

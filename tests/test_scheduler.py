@@ -103,6 +103,75 @@ def test_queue_orders_by_planned_start():
     assert len(due_now) + len(later) == 2
 
 
+def test_queue_replan_shrinks_deadline_not_extends_it():
+    """Waiting in the queue must never extend the absolute deadline: after
+    a replan at t, every new plan still finishes by the job's original
+    submitted_t + deadline_s."""
+    pl = CarbonPlanner(FTNS)
+    q = CarbonAwareQueue(pl)
+    job = TransferJob("d", 300e9, ("uc",), "tacc",
+                      SLA(deadline_s=10 * 3600.0), T0)
+    q.submit(job)
+    abs_deadline = T0 + 10 * 3600.0
+    for wait_h in (2.0, 5.0, 8.0):
+        q.replan_pending(T0 + wait_h * 3600.0)
+        (j2, p2), = [(e.job, e.plan)
+                     for e in (h.event for h in q._pending.values())]
+        assert j2.uuid == "d"
+        assert p2.start_t >= T0 + wait_h * 3600.0 - 1e-6
+        if p2.feasible:
+            assert p2.start_t + p2.predicted_duration_s <= abs_deadline + 1
+    # slack exhausted: the rebased deadline floors at 1 s and the plan is
+    # forced immediate (feasible or flagged infeasible, never extended)
+    q.replan_pending(T0 + 11 * 3600.0)
+    (_, p3), = [(e.job, e.plan)
+                for e in (h.event for h in q._pending.values())]
+    assert p3.start_t == pytest.approx(T0 + 11 * 3600.0)
+    assert not p3.feasible
+
+
+def test_queue_replan_counts_changed_plans():
+    pl = CarbonPlanner(FTNS)
+    q = CarbonAwareQueue(pl)
+    jobs = [TransferJob(f"c{i}", (100 + 50 * i) * 1e9, ("uc", "site_ne"),
+                        "tacc", SLA(deadline_s=30 * 3600.0), T0)
+            for i in range(4)]
+    before = {j.uuid: p for j, p in zip(jobs, q.submit_many(jobs))}
+    changed = q.replan_pending(T0 + 4 * 3600.0)
+    after = {e.job.uuid: e.plan
+             for e in (h.event for h in q._pending.values())}
+    manual = sum(
+        (after[u].source, after[u].ftn, after[u].start_t)
+        != (before[u].source, before[u].ftn, before[u].start_t)
+        for u in before)
+    assert changed == manual
+    assert len(q) == 4                  # nothing lost or duplicated
+
+
+def test_queue_replan_incremental_keeps_unmoved_plans():
+    """With a drift tolerance, an undrifted queue keeps its grid cells (the
+    incremental plan_batch path) — replan_pending reports 0 changes."""
+    pl = CarbonPlanner(FTNS)
+    q = CarbonAwareQueue(pl)
+    jobs = [TransferJob(f"k{i}", 200e9, ("uc",), "tacc",
+                        SLA(deadline_s=40 * 3600.0), T0) for i in range(3)]
+    q.submit_many(jobs)
+    assert q.replan_pending(T0 + 600.0, drift_tol=0.5) == 0
+    assert len(q) == 3
+
+
+def test_overlay_maybe_migrate_honors_measured_ci_fn():
+    """The control plane ranks alternatives under *measured* (drifted) CI:
+    a ci_fn that marks every path dirty except via m1 must steer the
+    choice there."""
+    ov = OverlayScheduler(FTNS, threshold=300.0, hysteresis=0.9)
+    fn = lambda p, t: 80.0 if p.dst == "m1" else 500.0  # noqa: E731
+    ch = ov.maybe_migrate(source="tacc", current=FTNS[0], t=T0,
+                          current_ci=500.0, bytes_done=1.0, ci_fn=fn)
+    assert ch is not None and ch.ftn.name == "m1"
+    assert ch.expected_ci == 80.0
+
+
 def test_forecasters_track_diurnal_structure():
     p = discover_path("uc", "tacc")
     hist_t = [T0 + h * 3600.0 for h in range(48)]

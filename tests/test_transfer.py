@@ -70,3 +70,80 @@ def test_pipelining_hides_latency():
     st_yes = eng.start("b", "uc", "tacc", 50e9, T0, pipelining=8)
     st_yes = eng.run(st_yes)
     assert (st_yes.t_now - st_yes.t_started) <= (st_no.t_now - st_no.t_started)
+
+
+def test_step_composed_run_matches_reference_oracle():
+    """run() is a loop over step(); run_reference() is the monolithic
+    scalar loop (per-step blake2b congestion, scalar path.ci). Same final
+    state, same ledger trajectory."""
+    eng_a, eng_b = TransferEngine(), TransferEngine()
+    led_a, led_b = TransferLedger("a"), TransferLedger("b")
+    st_a = eng_a.run(eng_a.start("a", "uc", "tacc", 250e9, T0), ledger=led_a)
+    st_b = eng_b.run_reference(eng_b.start("b", "uc", "tacc", 250e9, T0),
+                               ledger=led_b)
+    assert st_a.finished and st_b.finished
+    assert st_a.t_now == pytest.approx(st_b.t_now, abs=1e-6)
+    assert st_a.bytes_done == pytest.approx(st_b.bytes_done)
+    assert len(led_a.samples) == len(led_b.samples)
+    for sa, sb in zip(led_a.samples, led_b.samples):
+        assert sa.t == pytest.approx(sb.t, abs=1e-6)
+        assert sa.throughput_gbps == pytest.approx(sb.throughput_gbps)
+        assert sa.ci == pytest.approx(sb.ci, rel=1e-9)
+    # both observed the same achieved gbps into their models
+    assert eng_a.model.history[-1][-1] == pytest.approx(
+        eng_b.model.history[-1][-1], rel=1e-9)
+
+
+def test_final_step_is_prorated_not_overshot():
+    """A transfer finishing mid-step must not advance a full dt_s: the
+    wall clock ends at the completion instant and the achieved gbps fed to
+    the ThroughputModel is exact, not diluted by idle tail time."""
+    eng = TransferEngine(dt_s=60.0)
+    st = eng.start("p", "uc", "tacc", 100e9, T0)
+    st = eng.run(st)
+    elapsed = st.t_now - st.t_started
+    # the clock stops at the completion instant, strictly inside the last
+    # full step (the seed always advanced a full dt_s)
+    full_steps = int(elapsed // 60.0)
+    assert 0 < elapsed - full_steps * 60.0 < 60.0
+    # achieved == bytes/elapsed exactly (the pre-fix skew was up to dt_s)
+    achieved = eng.model.history[-1][-1]
+    assert achieved == pytest.approx(100e9 * 8.0 / 1e9 / elapsed, rel=1e-12)
+    # stepping a finished transfer is a no-op
+    obs = eng.step(st)
+    assert obs.finished and obs.step_s == 0.0 and obs.bytes_delta == 0.0
+
+
+def test_congestion_trace_matches_per_step_hash():
+    """The windowed congestion trace reproduces the seed's per-step blake2b
+    values bit-for-bit (one hash per (src, dst, window) instead of one per
+    query)."""
+    eng = TransferEngine()
+    st = eng.start("c", "uc", "tacc", 1e9, T0)
+    for k in range(200):
+        t = T0 + k * eng.dt_s
+        assert eng._congestion(st, t) == \
+            eng._congestion_reference(st, t, eng.dt_s)
+
+
+def test_resume_excludes_prior_bytes_from_achieved_gbps():
+    eng = TransferEngine()
+    st = eng.start("r", "uc", "tacc", 300e9, T0)
+    st = eng.run(st, until=T0 + 120.0)
+    assert not st.finished and st.bytes_done > 0
+    token = st.checkpoint()
+    st2 = eng.start("r", "uc", "site_qc", 300e9, st.t_now, resume=token)
+    assert st2.bytes_at_start == token["offset"]
+    st2 = eng.run(st2)
+    assert st2.finished
+    achieved = eng.model.history[-1][-1]
+    moved = (300e9 - token["offset"]) * 8.0 / 1e9
+    assert achieved == pytest.approx(
+        moved / (st2.t_now - st2.t_started), rel=1e-12)
+
+
+def test_observe_flag_gates_model_feedback():
+    eng = TransferEngine()
+    st = eng.start("q", "uc", "tacc", 50e9, T0, observe=False)
+    st = eng.run(st)
+    assert st.finished and not eng.model.history
