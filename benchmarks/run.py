@@ -27,6 +27,7 @@ def _registry():
         ("carbon_field", P.carbon_field),
         ("planner_scan", P.planner_scan),
         ("fleet_loop", P.fleet_loop),
+        ("fleet_sharded", P.fleet_sharded),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verify entrypoint (see ROADMAP.md): run from the repo root or any
-# subdirectory; mirrors exactly what CI runs. Set CHECK_BENCH=1 to follow
-# the tests with the bench smoke (planner grid scan + fleet control loop),
-# refreshing BENCH_planner.json / BENCH_fleet.json.
+# subdirectory; mirrors exactly what CI runs. The docs gate (intra-repo
+# markdown links + docs/ snippet execution) always runs; set CHECK_BENCH=1
+# to follow the tests with the bench smoke (planner grid scan + fleet
+# control loop + sharded scale-out sweep), refreshing BENCH_planner.json /
+# BENCH_fleet.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/check_docs.py
 if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only planner_scan
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_loop
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only fleet_sharded
 fi

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Docs gate: every intra-repo markdown link must resolve, and every
+``python`` code fence under docs/ must execute.
+
+Run from anywhere (CI runs it via scripts/check.sh and the `docs` job):
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+Link rule: inline links ``[text](target)`` in every tracked *.md file are
+checked unless the target is external (``http(s)://``, ``mailto:``) or a
+pure fragment (``#...``). Relative targets resolve against the file's
+directory; an optional ``#fragment`` is stripped (anchors are not
+verified, existence is).
+
+Snippet rule: fenced ```` ```python ```` blocks in docs/*.md run top to
+bottom **per file** in one shared namespace (so a tutorial can build on
+its earlier blocks), with the repo's ``src`` on sys.path. A block that
+raises fails the gate — docs that drift from the code break CI, which is
+the point. Keep snippets cheap; anything slow belongs in benchmarks.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+
+
+def tracked_markdown() -> list[Path]:
+    try:
+        out = subprocess.run(["git", "ls-files", "-co",
+                              "--exclude-standard", "*.md", "**/*.md"],
+                             cwd=ROOT, capture_output=True, text=True,
+                             check=True).stdout.split()
+        files = [ROOT / p for p in out]
+    except (OSError, subprocess.CalledProcessError):
+        files = list(ROOT.glob("*.md")) + list(ROOT.glob("docs/*.md"))
+    return sorted(set(f for f in files if f.exists()))
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks so code-comment '[x](y)' can't false-flag
+    the link checker."""
+    return re.sub(r"^```.*?^```\s*$", "", text,
+                  flags=re.MULTILINE | re.DOTALL)
+
+
+def check_links(files: list[Path]) -> list[str]:
+    errors = []
+    for f in files:
+        for target in LINK_RE.findall(strip_fences(f.read_text())):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            candidate = (f.parent / rel).resolve()
+            if not candidate.exists():
+                errors.append(f"{f.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def run_snippets(files: list[Path]) -> list[str]:
+    errors = []
+    src = str(ROOT / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    for f in files:
+        if f.parent.name != "docs":
+            continue
+        # a real module registered in sys.modules, so dataclasses &
+        # friends can resolve __module__ from inside the snippet
+        import types
+        mod = types.ModuleType(f"docs_snippet_{f.stem}")
+        sys.modules[mod.__name__] = mod
+        for i, block in enumerate(FENCE_RE.findall(f.read_text())):
+            try:
+                exec(compile(block, f"{f.name}[snippet {i}]", "exec"),
+                     mod.__dict__)
+            except Exception:
+                errors.append(f"{f.relative_to(ROOT)} snippet {i} failed:\n"
+                              + traceback.format_exc(limit=4))
+    return errors
+
+
+def main() -> int:
+    files = tracked_markdown()
+    errors = check_links(files) + run_snippets(files)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    n_snip = sum(len(FENCE_RE.findall(f.read_text()))
+                 for f in files if f.parent.name == "docs")
+    print(f"check_docs: {len(files)} markdown files, {n_snip} docs "
+          f"snippets, {len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,7 +32,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.carbon.energy import HostPowerModel, hop_power_w
+from repro.core.carbon.energy import (HOP_CLASSES, HostPowerModel,
+                                      classify_hop, hop_power_w)
 from repro.core.carbon.intensity import REGIONS, get_calibration
 from repro.core.carbon.path import NetworkPath
 
@@ -126,6 +127,7 @@ class CarbonField:
         self._hop_noise = _NoiseTable("{k}:{h}")       # Hop.ci hourly band
         self._hop_base: Dict[str, float] = {}          # Hop.ci per-ip band
         self._hop_grid_cache: Dict[Tuple, np.ndarray] = {}
+        self._weight_fn_cache: Dict[Tuple, Callable] = {}
 
     # --- zone level --------------------------------------------------------
     def zone_ci(self, zone: str, ts: ArrayLike,
@@ -362,6 +364,56 @@ class CarbonField:
         for i, hop in enumerate(path.hops[1:-1], start=1):
             w[i] = hop_power_w(hop.info.org, throughput_gbps)
         return w
+
+    def device_weight_fn(self, path: NetworkPath, sender: HostPowerModel,
+                         receiver: HostPowerModel, parallelism: int,
+                         concurrency: int
+                         ) -> Callable[[ArrayLike], np.ndarray]:
+        """:meth:`_device_weights` with the route baked in: returns a
+        cached ``gbps -> (n_hops,)`` (or ``(n_gbps,) -> (n_hops, n_gbps)``)
+        closure over precomputed per-hop coefficient arrays. The fleet
+        controller's per-step emission accounting calls this on whole step
+        vectors; the scalar result is float-identical to
+        :meth:`_device_weights` (same clamp and summation order).
+        """
+        # discover_path memoizes NetworkPath instances, so identity is a
+        # stable key (hashing the hops tuple is the hot-path cost here)
+        key = (id(path), sender.name, receiver.name,
+               parallelism, concurrency)
+        fn = self._weight_fn_cache.get(key)
+        if fn is not None:
+            return fn
+        n = path.n_hops
+        idle, cw, mw, nw = (np.zeros(n) for _ in range(4))
+        den = np.ones(n)
+        c0 = 0.05 + 0.02 * (parallelism * concurrency)
+        for j, host in ((0, sender), (n - 1, receiver)):
+            idle[j], cw[j], mw[j], nw[j] = (host.idle_w, host.cpu_w,
+                                            host.mem_w, host.nic_w)
+            den[j] = host.nic_speed_gbps
+        for j, hop in enumerate(path.hops[1:-1], start=1):
+            c = HOP_CLASSES[classify_hop(hop.info.org)]
+            nw[j], den[j] = c["port_w"], c["line_gbps"]
+
+        def w_of(gbps: ArrayLike, _idle=idle, _cw=cw, _mw=mw, _nw=nw,
+                 _den=den, _c0=c0) -> np.ndarray:
+            g = np.asarray(gbps, dtype=np.float64)
+            if g.ndim:                 # (hops, n_gbps) for step vectors
+                _idle, _cw, _mw, _nw = (x[:, None] for x in
+                                        (_idle, _cw, _mw, _nw))
+                _den = _den[:, None]
+            u_cpu = np.minimum(_c0 + (0.4 * g) / _den, 1.0)
+            u_mem = np.minimum(0.10 + (0.05 * g) / _den, 1.0)
+            u_nic = np.minimum(g / _den, 1.0)
+            return (_idle
+                    + _cw * np.minimum(np.maximum(u_cpu, 0.0), 1.0)
+                    + _mw * np.minimum(np.maximum(u_mem, 0.0), 1.0)
+                    + _nw * u_nic)
+
+        if len(self._weight_fn_cache) >= self._GRID_CACHE_MAX:
+            self._weight_fn_cache.pop(next(iter(self._weight_fn_cache)))
+        self._weight_fn_cache[key] = w_of
+        return w_of
 
 
 _DEFAULT: Optional[CarbonField] = None

@@ -18,10 +18,13 @@ def __getattr__(name):
     if name in ("FleetController", "FleetReport", "JobOutcome"):
         from repro.core.controlplane import controller
         return getattr(controller, name)
+    if name == "ShardedFleet":
+        from repro.core.controlplane import sharded
+        return sharded.ShardedFleet
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Event", "EventLoop", "JobArrival", "JobReady", "StepTick", "ReplanTick",
     "MigrationCheck", "ForecastShock", "JobComplete",
-    "FleetController", "FleetReport", "JobOutcome",
+    "FleetController", "FleetReport", "JobOutcome", "ShardedFleet",
 ]

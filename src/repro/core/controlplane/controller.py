@@ -30,6 +30,28 @@ that closed loop:
 
 ``run()`` drains the loop and emits a :class:`FleetReport` with per-job
 planned-vs-actual emissions, migrations, SLA misses and fleet throughput.
+
+Layer contract:
+
+* the controller owns **all** observation wiring — ``TransferEngine.step``
+  stays a pure resumable step (see ``core.transfer.engine``); ledger,
+  Pmeter and CI sampling happen here, and re-integrating every job's
+  ledger (``FleetReport.ledger_total_g``) must reproduce the step
+  accumulator exactly;
+* one controller, one clock — everything advances on the shared
+  :class:`EventLoop` (monotone, deterministic; see
+  ``core.controlplane.events``); scale-out means *more controllers*, not
+  threads inside one: ``core.controlplane.sharded.ShardedFleet``
+  partitions jobs across independent controllers over one shared
+  :class:`CarbonField` and merges their reports
+  (:meth:`FleetReport.merged` — totals and the ledger audit are sums, so
+  merging is exact and associative);
+* throughput learning is attributed to the leg that *bound* the rate —
+  (source, relay) when leg 1 bound, (relay, dst) when leg 2 did, nothing
+  when an FTN NIC cap clamped the stream (the achieved rate then says
+  nothing about either pair) — and the observation fires at the
+  ``JobComplete`` event so it lands in event-time order even when engine
+  steps are batched between migration-check boundaries.
 """
 from __future__ import annotations
 
@@ -70,6 +92,14 @@ class _JobRecord:
     power_fn: Optional[Callable[[float], float]] = None  # gbps -> watts
     # (gbps, t) -> (total watts, gCO2/s): hop-resolved emission rate
     rate_fn: Optional[Callable[[float, float], Tuple[float, float]]] = None
+    # per-leg gbps -> (hops,) device-power closures for the current route
+    leg_w_fns: Tuple[Callable, ...] = ()
+    # steps awaiting vectorized emission accounting: (t1, bytes, gbps, dt)
+    pending: List[Tuple[float, float, float, float]] = \
+        dataclasses.field(default_factory=list)
+    # (src, dst) leg the achieved rate teaches at JobComplete (the leg
+    # that bound the rate; None when an FTN NIC cap clamped the stream)
+    observe_leg: Optional[Tuple[str, str]] = None
     power_segments: List[Tuple[float, Callable[[float], float]]] = \
         dataclasses.field(default_factory=list)  # (t_from, power_fn) history
     dispatch_t: float = 0.0
@@ -124,6 +154,41 @@ class FleetReport:
     sim_span_s: float
     wall_s: float
     jobs_per_s: float
+
+    @classmethod
+    def merged(cls, reports: Sequence["FleetReport"],
+               wall_s: Optional[float] = None) -> "FleetReport":
+        """Merge shard reports into one fleet report (exact and
+        associative: every total, counter and the ledger audit are plain
+        sums, so a merge of merges equals the merge of the union —
+        ``tests/test_sharded.py`` property-tests this over arbitrary
+        partitions).
+
+        ``outcomes`` concatenate in shard order. ``sim_span_s`` is the
+        longest shard's span (shards share the clock origin).
+        ``wall_s`` defaults to the summed shard walls — the sequential
+        in-process cost; a coordinator that ran shards concurrently
+        passes its measured wall — and ``jobs_per_s`` is derived from it.
+        """
+        outcomes = [o for r in reports for o in r.outcomes]
+        n_completed = sum(r.n_completed for r in reports)
+        wall = sum(r.wall_s for r in reports) if wall_s is None else wall_s
+        return cls(
+            outcomes=outcomes,
+            n_jobs=sum(r.n_jobs for r in reports),
+            n_completed=n_completed,
+            total_planned_g=sum(r.total_planned_g for r in reports),
+            total_actual_g=sum(r.total_actual_g for r in reports),
+            ledger_total_g=sum(r.ledger_total_g for r in reports),
+            migrations=sum(r.migrations for r in reports),
+            replan_events=sum(r.replan_events for r in reports),
+            plans_changed=sum(r.plans_changed for r in reports),
+            sla_misses=sum(r.sla_misses for r in reports),
+            n_events=sum(r.n_events for r in reports),
+            n_steps=sum(r.n_steps for r in reports),
+            sim_span_s=max((r.sim_span_s for r in reports), default=0.0),
+            wall_s=wall,
+            jobs_per_s=n_completed / wall if wall > 0 else 0.0)
 
     def summary(self) -> str:
         dev = (self.total_actual_g / self.total_planned_g - 1.0) * 100 \
@@ -186,6 +251,8 @@ class FleetController:
         self._shocks: List[ForecastShock] = []
         self._outstanding = 0
         self._ticks_armed = False
+        self._next_migration_t = float("inf")
+        self._until = float("inf")
         self._t_first: Optional[float] = None
         self._t_last = 0.0
         self.migrations = 0
@@ -196,10 +263,13 @@ class FleetController:
         self.n_events = 0
 
     # --- submission / drift injection --------------------------------------
-    def submit(self, job: TransferJob) -> None:
+    def submit(self, job: TransferJob, plan: Optional[Plan] = None) -> None:
+        """Enqueue one arrival. ``plan`` optionally carries an
+        admission-time plan (the sharded fleet's batched admission); None
+        means the queue plans the job when the arrival fires."""
         self._outstanding += 1
         self.events.push(JobArrival(t=max(job.submitted_t, self.events.now),
-                                    job=job))
+                                    job=job, plan=plan))
 
     def submit_many(self, jobs: Sequence[TransferJob]) -> None:
         for job in jobs:
@@ -260,6 +330,7 @@ class FleetController:
     # --- the loop -----------------------------------------------------------
     def run(self, until: Optional[float] = None) -> FleetReport:
         wall0 = time.perf_counter()
+        self._until = float("inf") if until is None else until
         while True:
             ev = self.events.pop()
             if ev is None or (until is not None and ev.t > until):
@@ -276,11 +347,12 @@ class FleetController:
             self._ticks_armed = True
             self.events.push(ReplanTick(t=t + self.replan_every_s))
             self.events.push(MigrationCheck(t=t + self.migrate_check_every_s))
+            self._next_migration_t = t + self.migrate_check_every_s
 
     # --- handlers -----------------------------------------------------------
     def _on_arrival(self, ev: JobArrival) -> None:
         self._arm_ticks(ev.t)
-        plan = self.queue.submit(ev.job)
+        plan = self.queue.submit(ev.job, plan=ev.plan)
         self._records[ev.job.uuid] = _JobRecord(
             job=ev.job, plan=plan, admitted_plan=plan)
 
@@ -314,10 +386,12 @@ class FleetController:
                    ) -> Tuple[Tuple[NetworkPath, ...], float,
                               Callable[[float], float],
                               Callable[[float, float], Tuple[float, float]],
-                              bool]:
+                              Tuple[Callable, ...],
+                              Optional[Tuple[str, str]]]:
         """(paths, bottleneck gbps, gbps->watts power model,
-        (gbps, t)->(watts, gCO2/s) measured emission rate, and whether the
-        first leg's own prediction binds the rate) for running ``job`` as
+        (gbps, t)->(watts, gCO2/s) measured emission rate, per-leg device
+        weight closures, and the (src, dst) leg the achieved rate should
+        teach — None when nothing binds) for running ``job`` as
         source -> relay_node [-> job.dst] — shared by dispatch,
         post-migration rerouting and the migration emission guard."""
         legs: List[Tuple[str, str]] = [(source, relay_node)]
@@ -330,49 +404,63 @@ class FleetController:
         base = min(leg_gbps)
         if ftn is not None:
             base = min(base, ftn.max_gbps)
-        # the achieved rate teaches the model about (source, relay) only
-        # when that leg is what bound it — an FTN NIC cap or a slow second
-        # leg says nothing about the pair and would poison the correction
-        leg1_binds = base >= leg_gbps[0] - 1e-12
+        # the achieved rate teaches the model about the leg that bound it
+        # — leg 1, or (relay, dst) when the second hop is the bottleneck;
+        # an FTN NIC cap binds neither and would poison the correction
+        observe_leg: Optional[Tuple[str, str]] = None
+        if base >= leg_gbps[0] - 1e-12:
+            observe_leg = legs[0]
+        elif len(legs) > 1 and base >= leg_gbps[1] - 1e-12:
+            observe_leg = legs[1]
         relay_pm = (ftn.power_model if ftn is not None
                     else host_profile_for_endpoint(relay_node))
         sender_pm = HOST_PROFILES[self.engine.src_profile]
         receivers = [relay_pm] if len(paths) == 1 else \
             [relay_pm, host_profile_for_endpoint(job.dst)]
         senders = [sender_pm] if len(paths) == 1 else [sender_pm, relay_pm]
+        w_fns = tuple(self.field.device_weight_fn(p, s, r, job.parallelism,
+                                                  job.concurrency)
+                      for p, s, r in zip(paths, senders, receivers))
 
-        def power_fn(gbps: float, _paths=paths, _s=senders, _r=receivers,
-                     _par=job.parallelism, _con=job.concurrency) -> float:
-            return sum(self.field.path_power_w(p, s, r, gbps,
-                                               parallelism=_par,
-                                               concurrency=_con)
-                       for p, s, r in zip(_paths, _s, _r))
+        def power_fn(gbps, _fns=w_fns):
+            """Total device watts at a rate; broadcasts over gbps arrays
+            (the vectorized ledger audit integrates whole segments)."""
+            tot = 0.0
+            for fn in _fns:
+                tot = tot + fn(gbps).sum(axis=0)
+            return tot
 
-        def rate_fn(gbps: float, t: float, _paths=paths, _s=senders,
-                    _r=receivers, _par=job.parallelism,
-                    _con=job.concurrency) -> Tuple[float, float]:
+        def rate_fn(gbps: float, t: float, _paths=paths, _fns=w_fns
+                    ) -> Tuple[float, float]:
             """(total watts, gCO2/s) at the *measured* per-hop CI — the
             same device-power x device-CI product the planner integrates,
             so planned-vs-actual deviations mean drift, not model skew."""
             scale = self._zone_scale_at(t)
             w_tot, rate = 0.0, 0.0
-            for p, s, r in zip(_paths, _s, _r):
-                w = self.field._device_weights(p, s, r, gbps, _par, _con)
+            for p, fn in zip(_paths, _fns):
+                w = fn(gbps)
                 w_tot += float(w.sum())
                 rate += self.field.path_device_rate_scalar(
                     p, w, t, zone_scale=scale)
             return w_tot, rate / 3.6e6
 
-        return paths, base, power_fn, rate_fn, leg1_binds
+        return paths, base, power_fn, rate_fn, w_fns, observe_leg
 
     def _reroute(self, rec: _JobRecord, t: float) -> None:
         """(Re)derive paths, bottleneck rate and device power for the
-        current route — on dispatch and after every migration."""
-        paths, base, power_fn, rate_fn, leg1_binds = self._route_for(
-            rec.job, rec.state.src, rec.current_ftn, rec.state.dst)
+        current route — on dispatch and after every migration. Callers
+        must :meth:`_flush` the old route's pending steps first."""
+        paths, base, power_fn, rate_fn, w_fns, observe_leg = \
+            self._route_for(rec.job, rec.state.src, rec.current_ftn,
+                            rec.state.dst)
         rec.paths, rec.base_gbps = paths, base
         rec.power_fn, rec.rate_fn = power_fn, rate_fn
-        rec.state.observe_on_finish = leg1_binds
+        rec.leg_w_fns = w_fns
+        # the controller observes at the JobComplete event, not inside the
+        # engine step: batched stepping may *process* a completion early,
+        # and the observation must land in event-time order
+        rec.state.observe_on_finish = False
+        rec.observe_leg = observe_leg
         rec.power_segments.append((t, power_fn))
 
     def _on_step(self, ev: StepTick) -> None:
@@ -380,20 +468,83 @@ class FleetController:
         if rec is None:
             return
         st = rec.state
-        obs = self.engine.step(st, path=rec.paths[0],
-                               base_gbps=rec.base_gbps)
-        self.n_steps += 1
-        w_tot, g_per_s = rec.rate_fn(obs.gbps, st.t_now)
-        rec.actual_g += g_per_s * obs.step_s
-        rec.bytes_wire += obs.bytes_delta
-        # ledger CI is the power-weighted effective CI, so re-integrating
-        # the ledger (power x ci x dt) reproduces the step accounting
-        rec.ledger.record(st.t_now, rec.bytes_wire,
-                          g_per_s * 3.6e6 / max(w_tot, 1e-9), obs.gbps)
-        if obs.finished:
-            self._complete(rec, st.t_now)
-        else:
-            self.events.push(StepTick(t=st.t_now, job_uuid=ev.job_uuid))
+        # Steps run back-to-back up to the next migration-check boundary —
+        # the only policy that reads in-flight state (stepping is pure
+        # congestion x rate mechanics; measured CI never enters it, so
+        # crossing a shock instant mid-batch is exact *because* scoring is
+        # deferred to a flush that runs after the shock event popped). A
+        # transfer that can no longer migrate steps straight to
+        # completion. The batch never passes the run horizon: a `until`
+        # cut must freeze jobs in flight exactly like per-event stepping.
+        boundary = self._next_migration_t \
+            if (rec.current_ftn is not None
+                and rec.migrations < self.max_migrations_per_job) \
+            else float("inf")
+        boundary = min(boundary, self._until)
+        path, base = rec.paths[0], rec.base_gbps
+        while True:
+            obs = self.engine.step(st, path=path, base_gbps=base)
+            self.n_steps += 1
+            rec.bytes_wire += obs.bytes_delta
+            # emission accounting is deferred: steps buffer until the
+            # route changes (migration) or the job ends, then one
+            # vectorized _flush scores the whole segment
+            rec.pending.append((st.t_now, rec.bytes_wire, obs.gbps,
+                                obs.step_s))
+            if obs.finished:
+                # scored at the JobComplete event, not here: a shock that
+                # fires mid-batch (t_shock <= t_finish) must pop first so
+                # the flush sees it
+                self._complete(rec, st.t_now)
+                return
+            if st.t_now >= boundary - 1e-9:
+                break
+        self.events.push(StepTick(t=st.t_now, job_uuid=ev.job_uuid))
+
+    def _flush(self, rec: _JobRecord) -> None:
+        """Score a segment of buffered steps against the *current* route:
+        actual emissions accumulate as device-power x measured device-CI x
+        step seconds (the hop-resolved product the planner integrates),
+        and each step lands in the ledger with the power-weighted
+        effective CI — so re-integrating the ledger (power x ci x dt)
+        reproduces this accounting. Must run before a reroute retires the
+        segment's route and before reporting."""
+        if not rec.pending:
+            return
+        ts, bytes_w, gbps, step_s = map(np.asarray, zip(*rec.pending))
+        rec.pending.clear()
+        w_tot = np.zeros(ts.shape)
+        rate = np.zeros(ts.shape)
+        for p, w_fn in zip(rec.paths, rec.leg_w_fns):
+            W = w_fn(gbps)                               # (hops, n)
+            w_tot += W.sum(axis=0)
+            M = self.field.hop_ci_matrix(p, ts)
+            if self._shocks:
+                M = M * self._zone_scale_rows(p, ts)
+            rate += (W * M).sum(axis=0)
+        g_per_s = rate / 3.6e6
+        rec.actual_g += float((g_per_s * step_s).sum())
+        ci_led = g_per_s * 3.6e6 / np.maximum(w_tot, 1e-9)
+        for t, b, ci, g in zip(ts, bytes_w, ci_led, gbps):
+            rec.ledger.record(float(t), float(b), float(ci), float(g))
+
+    def _zone_scale_rows(self, path: NetworkPath,
+                         ts: np.ndarray) -> np.ndarray:
+        """(hops, n_ts) shock multipliers — the vectorized counterpart of
+        :meth:`_zone_factor` (same multiplicative shock order)."""
+        cache: Dict[str, np.ndarray] = {}
+        rows = []
+        for h in path.hops:
+            r = cache.get(h.zone)
+            if r is None:
+                r = np.ones(ts.shape)
+                for s in self._shocks:
+                    if s.zones is None or h.zone in s.zones:
+                        r = np.where((ts >= s.t - 1e-9) & (ts <= s.until),
+                                     r * s.factor, r)
+                cache[h.zone] = r
+            rows.append(r)
+        return np.stack(rows)
 
     def _complete(self, rec: _JobRecord, t: float) -> None:
         del self._active[rec.job.uuid]
@@ -406,8 +557,26 @@ class FleetController:
         self.events.push(JobComplete(t=t, job_uuid=rec.job.uuid))
 
     def _on_complete(self, ev: JobComplete) -> None:
-        """Bookkeeping marker; policies that react to completions (e.g.
-        backfill admission) hook here."""
+        """Feed the achieved rate to the leg that bound it — (source,
+        relay) when leg 1 bound, (relay, dst) when the relay's second hop
+        was the bottleneck (the ROADMAP open item: leg-2 learning was
+        forfeited before), nothing under an FTN NIC cap. The observation
+        happens *here*, at the completion's event time, so batched
+        stepping cannot leak future throughput into earlier re-plans.
+        Policies that react to completions (e.g. backfill admission)
+        also hook here."""
+        rec = self._records[ev.job_uuid]
+        # settle the final segment now: every ForecastShock at or before
+        # the completion instant has popped, so the flush scores the
+        # batch-stepped tail against the CI it actually saw
+        self._flush(rec)
+        if rec.observe_leg is not None:
+            st = rec.state
+            achieved = ((st.bytes_done - st.bytes_at_start) * 8.0 / 1e9
+                        / max(st.t_now - st.t_started, 1e-9))
+            self.engine.model.observe(*rec.observe_leg,
+                                      rec.job.parallelism,
+                                      rec.job.concurrency, achieved)
 
     def _on_replan(self, ev: ReplanTick) -> None:
         if len(self.queue):
@@ -444,8 +613,8 @@ class FleetController:
             for ftn in self.ftns:
                 if ftn.name == rec.current_ftn.name:
                     continue
-                _, base, _, rate, _ = self._route_for(rec.job, rec.source,
-                                                      ftn, ftn.name)
+                _, base, _, rate, _, _ = self._route_for(rec.job, rec.source,
+                                                         ftn, ftn.name)
                 rem_s = rem_bits / (base * 1e9)
                 if rec.state.t_now + rem_s > deadline_t + 1e-6:
                     continue           # greener-but-late violates the SLA
@@ -458,6 +627,7 @@ class FleetController:
             self.overlay.events.append(MigrationEvent(
                 t=ev.t, from_ftn=rec.current_ftn.name, to_ftn=ftn.name,
                 bytes_done=rec.state.bytes_done, ci_at_migration=ci))
+            self._flush(rec)           # retire the old route's segment
             token = rec.state.checkpoint()
             rec.migrations += 1
             self.migrations += 1
@@ -472,8 +642,10 @@ class FleetController:
         if self._outstanding > 0:
             self.events.push(
                 MigrationCheck(t=ev.t + self.migrate_check_every_s))
+            self._next_migration_t = ev.t + self.migrate_check_every_s
         else:
             self._ticks_armed = False
+            self._next_migration_t = float("inf")
 
     def _on_shock(self, ev: ForecastShock) -> None:
         self._shocks.append(ev)
@@ -496,23 +668,36 @@ class FleetController:
     # --- reporting ----------------------------------------------------------
     def _ledger_emissions_g(self, rec: _JobRecord) -> float:
         """Re-integrate a job's ledger samples against its route power
-        history — the after-the-fact audit of the step accumulator."""
-        if rec.ledger is None:
+        history — the after-the-fact audit of the step accumulator. Each
+        sample charges the segment (route) active at its *start*; whole
+        segments integrate as one vectorized power x ci x dt pass."""
+        if rec.ledger is None or not rec.ledger.samples:
             return 0.0
-        g, prev_t, seg = 0.0, rec.dispatch_t, 0
-        segs = rec.power_segments
-        for s in rec.ledger.samples:
-            while seg + 1 < len(segs) and segs[seg + 1][0] <= prev_t + 1e-9:
-                seg += 1
-            g += segs[seg][1](s.throughput_gbps) * s.ci \
-                * (s.t - prev_t) / 3.6e6
-            prev_t = s.t
+        samples = rec.ledger.samples
+        n = len(samples)
+        ts = np.fromiter((s.t for s in samples), np.float64, n)
+        ci = np.fromiter((s.ci for s in samples), np.float64, n)
+        gb = np.fromiter((s.throughput_gbps for s in samples), np.float64, n)
+        prevs = np.concatenate([[rec.dispatch_t], ts[:-1]])
+        dts = ts - prevs
+        starts = np.array([t for t, _ in rec.power_segments])
+        seg_idx = np.maximum(
+            np.searchsorted(starts, prevs + 1e-9, side="right") - 1, 0)
+        g = 0.0
+        for j, (_, power_fn) in enumerate(rec.power_segments):
+            m = seg_idx == j
+            if m.any():
+                g += float((power_fn(gb[m]) * ci[m] * dts[m] / 3.6e6).sum())
         return g
 
     def _report(self, wall_s: float) -> FleetReport:
         outcomes = []
         total_planned = total_actual = ledger_total = 0.0
         n_completed = 0
+        for rec in self._records.values():
+            # jobs cut off by an `until` horizon (in flight, or completed
+            # with their JobComplete event past the cut) still settle
+            self._flush(rec)
         for rec in self._records.values():
             done = rec.completed_t is not None
             if done:

@@ -6,6 +6,19 @@ off one shared :class:`EventLoop`. The loop is a plain ``(t, seq)`` min-heap
 with lazy cancellation: ``push`` returns a handle, ``cancel`` marks it dead,
 ``pop`` skips dead entries. Ties break by insertion order, so the runtime is
 fully deterministic for a fixed submission sequence.
+
+Layer contract (what every consumer may assume, and must preserve):
+
+* **one monotone clock** — ``now`` only moves forward; pushing an event
+  behind the clock raises, so a handler bug cannot silently reorder
+  causality. Nothing in the runtime keeps a private clock.
+* **deterministic replay** — for a fixed submission sequence the pop order
+  is a pure function of (t, insertion seq); sharded fleets rely on this to
+  make every shard's run independently reproducible.
+* **events are plain records** — all policy lives in the controller's
+  handler table (``FleetController._HANDLERS``); an event type carries data
+  only. To add a policy, subclass :class:`Event` and register a handler
+  (see ``docs/extending.md`` for the worked example).
 """
 from __future__ import annotations
 
@@ -25,8 +38,13 @@ class Event:
 
 @dataclasses.dataclass
 class JobArrival(Event):
-    """A job enters the system at its submission time (admission)."""
+    """A job enters the system at its submission time (admission).
+
+    ``plan`` optionally carries an admission-time plan computed before the
+    event fired (the sharded fleet's batched admission); None means the
+    queue plans the job when the arrival is handled."""
     job: "TransferJob" = None
+    plan: "Optional[Plan]" = None
 
 
 @dataclasses.dataclass

@@ -1,0 +1,150 @@
+"""Sharded fleet scale-out: partitioned controllers over one carbon field.
+
+The :class:`FleetController` is single-threaded by design — one event loop,
+one monotone clock, deterministic replay. Scale-out therefore means *more
+controllers*, not threads inside one: :class:`ShardedFleet` partitions the
+job stream across N independent ``FleetController`` instances that share a
+single :class:`CarbonField` (one noise/trace cache — the expensive hashed
+state — is warmed once and read by every shard) and exposes the same
+``submit / submit_many / inject_shock / run`` API. Each shard owns its own
+planner, throughput model, engine and overlay, so shard runs are exactly
+the runs the same jobs would have had on a lone controller fed only that
+partition — which is what makes :meth:`FleetReport.merged` an *exact*
+merge: totals, counters and the ledger re-integration audit are plain sums.
+
+Admission is batched: ``submit_many`` groups jobs by shard and plans each
+group through the shard planner's ``plan_batch`` — with the default jax
+batch backend that is one jitted ``plan_batch_jax`` sweep per shard
+(``scheduler/grid_jax.py``), not a per-job grid scan — and hands the
+precomputed plans to the controllers via ``JobArrival.plan``. In-run
+re-plan sweeps batch the same way through the shard's own planner, so
+drifted queues re-score as one call too.
+
+Partitioning is deterministic and process-stable (blake2b, not Python's
+salted ``hash``):
+
+* ``"hash"`` — uuid-hashed, uniform spread (the default);
+* ``"source"`` — by first replica endpoint, so a site's jobs land on one
+  shard and its throughput-model corrections stay coherent;
+* any callable ``job -> int``.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.carbon.field import CarbonField, default_field
+from repro.core.controlplane.controller import FleetController, FleetReport
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.planner import CarbonPlanner, TransferJob
+
+
+def _stable_hash(key: str) -> int:
+    return int.from_bytes(
+        hashlib.blake2b(key.encode(), digest_size=8).digest(), "big")
+
+
+class ShardedFleet:
+    """N partitioned :class:`FleetController` shards, one merged report.
+
+    ``batch_backend`` is forwarded to every shard planner ("jax" stacks
+    each shard's full-scan planning into one jitted call; None picks jax
+    when available, numpy otherwise). Remaining keyword arguments are
+    forwarded to every ``FleetController``.
+    """
+
+    def __init__(self, ftns: Sequence[FTN], *, n_shards: int = 4,
+                 field: Optional[CarbonField] = None,
+                 partition: Union[str, Callable[[TransferJob], int]] = "hash",
+                 batch_backend: Optional[str] = None,
+                 **controller_kw):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if not callable(partition) and partition not in ("hash", "source"):
+            raise ValueError(f"partition must be 'hash', 'source' or a "
+                             f"callable, got {partition!r}")
+        self.field = field or default_field()
+        if batch_backend is None:
+            from repro.core.scheduler.grid_jax import HAVE_JAX
+            batch_backend = "jax" if HAVE_JAX else "numpy"
+        self.partition = partition
+        self.controllers: List[FleetController] = [
+            FleetController(
+                ftns, field=self.field,
+                planner=CarbonPlanner(ftns, field=self.field,
+                                      batch_backend=batch_backend),
+                **controller_kw)
+            for _ in range(n_shards)]
+        # fleet-level admission planner: scores every submitted job's grid
+        # in ONE batched call (base-capacity throughput model — in-run
+        # corrections are the shards' re-plan sweeps' job). Shocks
+        # injected *before* a submit are priced into admission via the
+        # same nowcast scale the controllers use; drift injected after
+        # admission is the re-plan sweeps' job.
+        self.planner = CarbonPlanner(ftns, field=self.field,
+                                     batch_backend=batch_backend)
+        self.planner.emission_scale_fn = self._emission_scale
+        self._shocks: List[tuple] = []   # (t, factor, until, zones|None)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.controllers)
+
+    def shard_of(self, job: TransferJob) -> int:
+        if callable(self.partition):
+            return int(self.partition(job)) % self.n_shards
+        key = job.uuid if self.partition == "hash" else job.replicas[0]
+        return _stable_hash(key) % self.n_shards
+
+    # --- the FleetController API, fleet-wide -------------------------------
+    def submit(self, job: TransferJob) -> None:
+        self.controllers[self.shard_of(job)].submit(job)
+
+    def submit_many(self, jobs: Sequence[TransferJob]) -> None:
+        """Batched admission: the *whole* fleet's (job x FTN x replica x
+        slot) grid stack is scored in one fleet-level ``plan_batch`` call
+        (one jitted sweep on the jax batch backend), then each arrival is
+        enqueued on its shard with the plan attached — shards never replan
+        at arrival, only at their drift sweeps."""
+        jobs = list(jobs)
+        for job, plan in zip(jobs, self.planner.plan_batch(jobs)):
+            self.controllers[self.shard_of(job)].submit(job, plan=plan)
+
+    def inject_shock(self, t: float, factor: float, *,
+                     duration_s: float = float("inf"),
+                     zones: Optional[Sequence[str]] = None) -> None:
+        self._shocks.append((t, factor, t + duration_s,
+                             tuple(zones) if zones is not None else None))
+        for ctl in self.controllers:
+            ctl.inject_shock(t, factor, duration_s=duration_s, zones=zones)
+
+    def _emission_scale(self, path, ts):
+        """Admission-time counterpart of
+        ``FleetController._emission_scale``: per-start-slot multiplier on
+        a leg's forecast emissions from the already-announced shock
+        schedule (hop-mean of the zone factors inside each window)."""
+        scale = np.ones(np.shape(ts))
+        for t0, factor, until, zones in self._shocks:
+            zf = [factor if (zones is None or h.zone in zones) else 1.0
+                  for h in path.hops]
+            f_path = sum(zf) / len(zf)
+            if f_path != 1.0:
+                scale = np.where((ts >= t0 - 1e-9) & (ts <= until),
+                                 scale * f_path, scale)
+        return scale
+
+    def run(self, until: Optional[float] = None) -> FleetReport:
+        """Drain every shard and merge. Shards run sequentially in-process
+        (they are fully independent — a deployment may run one per worker;
+        the per-shard :class:`FleetReport` list survives on
+        ``self.shard_reports``), and the merged ``jobs_per_s`` uses the
+        measured coordinator wall."""
+        wall0 = time.perf_counter()
+        reports = [ctl.run(until) for ctl in self.controllers]
+        merged = FleetReport.merged(
+            reports, wall_s=time.perf_counter() - wall0)
+        self.shard_reports = reports
+        return merged

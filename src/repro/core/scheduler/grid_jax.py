@@ -1,47 +1,67 @@
-"""Jit-compiled planner grid scoring on the jnp backend (ROADMAP open item).
+"""Jit-compiled planner grid scoring on the jnp backend.
 
-The planner's inner loop scores every candidate start slot of a (FTN x
-replica) leg by integrating the per-hop emission rate r(t) = sum_dev
-P_dev * CI_dev(t) / 3.6e6 over the transfer window. On the numpy backend
-that evaluation goes through ``CarbonField._hop_ci_grid``; here the same
-quantity is computed by a ``jax.jit``-compiled kernel built on the
-``make_window`` / ``window_ci`` dense view: all blake2b noise is hashed
-once into (zone x hour) and (hop x hour) arrays at window-build time, and
-the jitted function is pure array math.
+Layer contract: **numpy is the pinned oracle**. Every code path in this
+module recomputes a quantity that ``CarbonField`` (and through it
+``CarbonPlanner.plan`` / ``plan_batch``) already defines on numpy; the jax
+paths exist purely for speed and must agree with the numpy results within
+1e-4 relative (asserted by ``tests/test_controlplane.py``). New fast paths
+follow the same rule: add the jnp kernel *and* the equivalence test against
+the numpy implementation, never a jnp-only behaviour.
+
+Two scorers live here:
+
+* :class:`JaxGridScorer` — the per-leg backend behind
+  ``CarbonPlanner(backend="jax")``. The planner's inner loop scores every
+  candidate start slot of a (FTN x replica) leg by integrating the per-hop
+  emission rate r(t) = sum_dev P_dev * CI_dev(t) / 3.6e6 over the transfer
+  window; here that integral runs as a ``jax.jit``-compiled kernel built on
+  the ``make_window`` / ``window_ci`` dense view — all blake2b noise is
+  hashed once into (zone x hour) and (hop x hour) arrays at window-build
+  time, and the jitted function is pure array math.
+* :func:`batch_cell_emissions` — the fleet-scale path behind
+  ``CarbonPlanner.plan_batch_jax``: the (job x FTN x replica x slot) grids
+  of *many* jobs are padded/masked into one stacked cell table and scored
+  by a single jitted kernel (``vmap`` over the stacked job-cell axis, and
+  optionally ``shard_map`` over the cell axis when more than one device is
+  visible). One call replaces thousands of per-leg evaluations.
 
 Design notes for jit stability:
 
 * windows are anchored per *path* at an hour boundary with a generous
   horizon, so ``window_ci``'s host-side time constants (``t0``-derived)
   stay static across a planning session — recompiles happen per path, not
-  per job;
+  per job; the batched kernel instead passes every anchor-derived time
+  constant as a *traced* argument, so one compilation serves every
+  planning sweep;
 * grid lengths are padded to coarse buckets so shape-driven recompiles are
   bounded;
-* the f32 per-step rate is promoted to f64 on the host for the prefix-sum
-  gathers, so integration error stays at the per-element level (~1e-6).
-
-The numpy path (``CarbonField.transfer_emissions_g``) is the pinned oracle:
-``CarbonPlanner(backend="jax")`` must agree with ``backend="numpy"`` to
-~1e-4 relative (f32 CI evaluation), asserted by the test suite.
+* both kernels evaluate f32 CI and accumulate the prefix sums in f64
+  (~1e-7 relative emission error, memory-bound CPU passes at half the
+  bandwidth); the batched kernel runs under ``jax.experimental.enable_x64``
+  only so its *time and index* math (hour boundaries, day-of-week flips)
+  lands exactly where the numpy oracle puts it.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.carbon.energy import HostPowerModel
 from repro.core.carbon.field import (CarbonField, CarbonWindow, default_field,
                                      make_window, window_ci)
+from repro.core.carbon.intensity import REGIONS, get_calibration
 from repro.core.carbon.path import NetworkPath
 
 try:                                   # gate: jax is optional at runtime
     import jax
     import jax.numpy as jnp
+    from jax.experimental import enable_x64
     HAVE_JAX = True
 except Exception:                      # pragma: no cover - env without jax
-    jax, jnp = None, None
+    jax, jnp, enable_x64 = None, None, None
     HAVE_JAX = False
 
 _WINDOW_HOURS = 24 * 14                # per-anchor horizon (2 weeks)
@@ -161,3 +181,281 @@ class JaxGridScorer:
         prefix = np.concatenate([[0.0], np.cumsum(r[:n_grid])])
         full = (prefix[k + n_steps - 1] - prefix[k]) * dt_s
         return full + r[k + n_steps - 1] * rem
+
+
+# --- fleet-batched scoring (plan_batch_jax) --------------------------------
+#
+# One jitted call scores every (job, FTN, replica) cell of a whole fleet:
+# ragged per-job grids are padded/masked into rectangular tables, a stacked
+# (anchor, path) axis carries the per-hop CI grids, and a vmap over the
+# job-cell axis turns prefix-sum gathers into per-cell emission rows.
+
+_B_PAIRS = 64                          # (anchor, path) axis bucket
+_B_CELLS = 64                          # job-cell axis bucket
+_B_SLOTS = 16                          # start-slot axis bucket
+_B_HOURS = 168                         # window-hours bucket (one week)
+_B_ZONES = 8                           # zone axis bucket
+_MAX_GRID = 1 << 15                    # per-cell rate-grid cap (~22 days)
+_MAX_ELEMS = 32 * 1024 * 1024          # pairs*hops*grid budget per jit call
+
+
+@dataclasses.dataclass(frozen=True)
+class LegTask:
+    """One leg of one grid cell: a path plus its device-power weights."""
+    path: NetworkPath
+    anchor: float                      # grid anchor (the job's first slot)
+    w_dev: np.ndarray                  # (n_hops,) device power draw, W
+
+
+@dataclasses.dataclass(frozen=True)
+class CellTask:
+    """One (job, FTN, replica) cell: 1–2 legs sharing a slot/step layout."""
+    legs: Tuple[LegTask, ...]
+    n_slots: int                       # candidate starts: anchor + k*slot
+    n_steps: int                       # dt_s steps per transfer
+    rem_s: float                       # pro-rated final-step seconds
+
+
+def _round_up(n: int, b: int) -> int:
+    return int(math.ceil(max(n, 1) / b)) * b
+
+
+def _kernel(zbase, zamp, zdip, znamp, zpeak, znoise, cal_a, cal_b,
+            h_of_day0, day_frac_s, dow0, rel0a, anchor_idx, zone_idx,
+            band, hnoise, path_idx, pair_idx, w_dev, n_steps, rem,
+            *, n_grid, n_slots, slot_stride, dt_s, n_dev):
+    """The one-jit fleet scorer (shapes: Z zones, W hours, N anchors,
+    P paths, H hops, A (anchor, path) pairs, C cells, S slots, T=n_grid
+    rate-grid steps).
+
+    Stage 1 evaluates zone CI on the (anchor x zone x grid) lattice — the
+    trig/noise chain runs once per anchor-zone, not once per hop — with
+    all anchor-derived time constants traced, so one compilation serves
+    every sweep. Stage 2 gathers the lattice into per-(anchor, path)
+    device-CI grids (sub-metering band x hourly hop noise) and
+    prefix-sums them. Stage 3 vmaps a gather/einsum over the stacked
+    job-cell axis; with more than one visible device the cell axis is
+    additionally ``shard_map``-ed.
+    """
+    n_z, W = znoise.shape
+    n_hops = zone_idx.shape[1]
+    # time/index math stays f64 (hour boundaries must land exactly); the
+    # CI value chain runs f32 (memory-bound on CPU; ~1e-7 rel), and the
+    # prefix sum accumulates the f32 rates in f64 — the same split the
+    # per-leg JaxGridScorer uses, honoring the 1e-4 oracle bound.
+    t_rel = rel0a[:, None] + dt_s * jnp.arange(n_grid)[None, :]     # (N,T)
+    hour_rel = jnp.clip((t_rel // 3600.0).astype(jnp.int32), 0, W - 1)
+    hod = (((h_of_day0 + t_rel / 3600.0) % 24.0)
+           .astype(znoise.dtype)[:, None, :])                       # (N,1,T)
+    dow = ((dow0 + jnp.floor((t_rel + day_frac_s) / 86400.0)
+            .astype(jnp.int32)) % 7)[:, None, :]
+    v = (zbase[None, :, None] + zamp[None, :, None]
+         * jnp.cos(2 * np.pi * (hod - zpeak[None, :, None]) / 24.0))
+    v = v - zdip[None, :, None] * jnp.exp(-0.5 * ((hod - 13.0) / 2.5) ** 2)
+    v = jnp.where((dow == 5) | (dow == 6), v * 0.94, v)
+    v = v + znamp[None, :, None] * jnp.take(
+        znoise.ravel(),
+        jnp.arange(n_z)[None, :, None] * W + hour_rel[:, None, :])
+    v = jnp.maximum(v, 1.0)
+    v = jnp.maximum(cal_a * v + cal_b, 0.5)                         # (N,Z,T)
+    # stage 2: gather the lattice into (anchor, path) device-CI grids
+    zrow = anchor_idx[:, None] * n_z + zone_idx[path_idx]           # (A,H)
+    ci = v.reshape(-1, v.shape[2])[zrow]                            # (A,H,T)
+    hseq = jnp.arange(n_hops)
+    u = jnp.take(hnoise.reshape(-1, W).ravel(),
+                 (path_idx[:, None, None] * n_hops
+                  + hseq[None, :, None]) * W
+                 + hour_rel[anchor_idx][:, None, :])                # (A,H,T)
+    ci = ci * (1.0 + 0.02 * band[path_idx][:, :, None] + 0.005 * u)
+    prefix = jnp.concatenate(
+        [jnp.zeros(ci.shape[:2] + (1,), jnp.float64),
+         jnp.cumsum(ci.astype(jnp.float64), axis=2)],
+        axis=2)                                                     # (A,H,T+1)
+    kk = slot_stride * jnp.arange(n_slots)                          # (S,)
+    hh = hseq
+
+    def cell(pids, wd, n, rm, prefix, ci):
+        hi = kk + n - 1
+        p3, h3 = pids[:, None, None], hh[None, :, None]
+        seg = (prefix[p3, h3, jnp.minimum(hi, n_grid)[None, None, :]]
+               - prefix[p3, h3, kk[None, None, :]])
+        last = ci[p3, h3, jnp.minimum(hi, n_grid - 1)[None, None, :]]
+        return (jnp.einsum("lh,lhs->ls", wd, seg) * dt_s
+                + jnp.einsum("lh,lhs->ls", wd, last) * rm) / 3.6e6
+
+    vcell = jax.vmap(cell, in_axes=(0, 0, 0, 0, None, None))
+    if n_dev > 1:                      # optional scale-out across devices
+        from repro.models.layers import shard_map_compat
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]), ("cells",))
+        spec = jax.sharding.PartitionSpec
+        vcell = shard_map_compat(
+            vcell, mesh=mesh,
+            in_specs=(spec("cells"), spec("cells"), spec("cells"),
+                      spec("cells"), spec(), spec()),
+            out_specs=spec("cells"))
+    return vcell(pair_idx, w_dev, n_steps, rem, prefix, ci)         # (C,2,S)
+
+
+_kernel_jit = None                     # one compiled-kernel cache per process
+
+
+def _batch_kernel():
+    global _kernel_jit
+    if _kernel_jit is None:
+        _kernel_jit = jax.jit(_kernel, static_argnames=(
+            "n_grid", "n_slots", "slot_stride", "dt_s", "n_dev"))
+    return _kernel_jit
+
+
+def _device_count() -> int:
+    try:
+        return jax.device_count()
+    except Exception:                  # pragma: no cover - backend init race
+        return 1
+
+
+def batch_cell_emissions(field: CarbonField, cells: Sequence[CellTask], *,
+                         dt_s: float = 60.0, slot_stride: int = 60,
+                         shard: Optional[bool] = None) -> List[np.ndarray]:
+    """Score every cell's (leg, start-slot) emission table in one jitted
+    call per memory chunk. Returns, per cell, a ``(n_legs, n_slots)`` f64
+    array matching ``CarbonField.transfer_emissions_g`` per leg to ~1e-7
+    relative (f32 CI chain, f64 time/index math and prefix accumulation).
+
+    ``slot_stride`` is the slot spacing in dt_s steps (the planner's
+    ``slot_s / dt_s``; both legs of a cell share the slot/step layout).
+    ``shard`` forces the multi-device path on (True) or off (False); None
+    uses every visible device when there is more than one.
+    """
+    if not HAVE_JAX:
+        raise ImportError("batch_cell_emissions needs jax; use the numpy "
+                          "CarbonPlanner.plan_batch oracle instead")
+    n_dev = _device_count() if shard is None or shard else 1
+    if shard and n_dev < 2:
+        n_dev = 1
+    out: List[Optional[np.ndarray]] = [None] * len(cells)
+    # chunk the fleet so pairs*hops*grid stays under the element budget
+    # (pathological fleets with thousands of distinct anchors would
+    # otherwise materialize a multi-GB CI grid in one call)
+    order = sorted(range(len(cells)),
+                   key=lambda i: cells[i].legs[0].anchor)
+    i = 0
+    while i < len(order):
+        chunk: List[int] = []
+        pairs: Dict[Tuple, None] = {}
+        grid_max = hops_max = 0
+        while i < len(order):
+            c = cells[order[i]]
+            trial = dict(pairs)
+            for leg in c.legs:
+                # discover_path memoizes paths: identity is a stable key
+                trial.setdefault((leg.anchor, id(leg.path)), None)
+            g = max(grid_max, (c.n_slots - 1) * slot_stride + c.n_steps)
+            h = max(hops_max, max(leg.path.n_hops for leg in c.legs))
+            if chunk and len(trial) * h * g > _MAX_ELEMS:
+                break
+            pairs, grid_max, hops_max = trial, g, h
+            chunk.append(order[i])
+            i += 1
+        for ci_, emis in zip(chunk, _score_chunk(
+                field, [cells[j] for j in chunk], dt_s=dt_s,
+                slot_stride=slot_stride, n_dev=n_dev)):
+            out[ci_] = emis
+    return out                         # type: ignore[return-value]
+
+
+def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
+                 dt_s: float, slot_stride: int, n_dev: int
+                 ) -> List[np.ndarray]:
+    # --- dedupe (anchor, path) pairs and paths ----------------------------
+    paths: Dict[Tuple, int] = {}
+    path_objs: List[NetworkPath] = []
+    anchors: Dict[float, int] = {}
+    pair_ids: Dict[Tuple, int] = {}
+    pair_path: List[int] = []
+    pair_anchor: List[int] = []
+    n_grid = 1
+    for c in cells:
+        n_grid = max(n_grid, (c.n_slots - 1) * slot_stride + c.n_steps)
+        for leg in c.legs:
+            pk = id(leg.path)          # memoized paths: identity is stable
+            if pk not in paths:
+                paths[pk] = len(path_objs)
+                path_objs.append(leg.path)
+            if leg.anchor not in anchors:
+                anchors[leg.anchor] = len(anchors)
+            ak = (leg.anchor, pk)
+            if ak not in pair_ids:
+                pair_ids[ak] = len(pair_path)
+                pair_path.append(paths[pk])
+                pair_anchor.append(anchors[leg.anchor])
+    n_hops = max(p.n_hops for p in path_objs)
+    n_slots = max(c.n_slots for c in cells)
+    zones = sorted({h.zone for p in path_objs for h in p.hops})
+    # --- window: one hour-aligned anchor covering every pair's grid -------
+    t0w = 3600.0 * math.floor(min(anchors) / 3600.0)
+    t_end = max(a + n_grid * dt_s for a in anchors)
+    hours = _round_up(int(math.ceil((t_end - t0w) / 3600.0)) + 1, _B_HOURS)
+    hour0 = int(t0w // 3600.0)
+    hour_idx = np.arange(hour0, hour0 + hours)
+    n_z = _round_up(len(zones), _B_ZONES)
+    znoise = np.zeros((n_z, hours), dtype=np.float32)
+    for zi_, z in enumerate(zones):
+        znoise[zi_] = (field._zone_noise.lookup(z, hour_idx) - 0.5) * 2.0
+    regs = [REGIONS[z] for z in zones]
+
+    def _zcol(attr):
+        col = np.zeros(n_z, dtype=np.float32)
+        col[:len(regs)] = [getattr(r, attr) for r in regs]
+        return col
+
+    cal_a, cal_b = get_calibration()
+    # --- per-path hop tables (padded to n_hops; pads weigh 0) -------------
+    n_p = _round_up(len(path_objs), 2)
+    zone_idx = np.zeros((n_p, n_hops), dtype=np.int32)
+    band = np.zeros((n_p, n_hops), dtype=np.float32)
+    hnoise = np.zeros((n_p, n_hops, hours), dtype=np.float32)
+    for pi, p in enumerate(path_objs):
+        for hi_, h in enumerate(p.hops):
+            zone_idx[pi, hi_] = zones.index(h.zone)
+            band[pi, hi_] = field._hop_band(h.ip)
+            hnoise[pi, hi_] = field._hop_noise.lookup(h.ip, hour_idx) - 0.5
+    # --- anchor, pair and cell tables -------------------------------------
+    n_anch = _round_up(len(anchors), 32)
+    rel0a = np.zeros(n_anch)
+    rel0a[:len(anchors)] = np.fromiter(anchors, dtype=np.float64,
+                                       count=len(anchors)) - t0w
+    n_a = _round_up(len(pair_path), _B_PAIRS)
+    path_idx = np.zeros(n_a, dtype=np.int32)
+    path_idx[:len(pair_path)] = pair_path
+    anchor_idx = np.zeros(n_a, dtype=np.int32)
+    anchor_idx[:len(pair_anchor)] = pair_anchor
+    # the cell axis must split evenly across devices for shard_map
+    n_c = _round_up(len(cells), math.lcm(_B_CELLS, max(n_dev, 1)))
+    pair_idx = np.zeros((n_c, 2), dtype=np.int32)
+    w_dev = np.zeros((n_c, 2, n_hops))
+    n_steps = np.ones(n_c, dtype=np.int32)
+    rem = np.zeros(n_c)
+    for ci_, c in enumerate(cells):
+        for li, leg in enumerate(c.legs):
+            pair_idx[ci_, li] = pair_ids[(leg.anchor, id(leg.path))]
+            w_dev[ci_, li, :leg.path.n_hops] = leg.w_dev
+        n_steps[ci_] = c.n_steps
+        rem[ci_] = c.rem_s
+    n_grid_pad = _round_up(n_grid, _GRID_BUCKET)
+    n_slots_pad = _round_up(n_slots, _B_SLOTS)
+    with enable_x64():
+        emis = np.asarray(_batch_kernel()(
+            _zcol("base_ci"), _zcol("diurnal_amp"), _zcol("solar_dip"),
+            _zcol("noise"), _zcol("peak_hour"), znoise,
+            np.float32(cal_a), np.float32(cal_b),
+            (t0w / 3600.0) % 24.0,
+            t0w - 86400.0 * math.floor(t0w / 86400.0),
+            np.int32(int(t0w // 86400.0) % 7),
+            rel0a, anchor_idx, zone_idx, band, hnoise, path_idx,
+            pair_idx, w_dev, n_steps, rem,
+            n_grid=n_grid_pad, n_slots=n_slots_pad,
+            slot_stride=slot_stride, dt_s=float(dt_s), n_dev=n_dev),
+            dtype=np.float64)
+    return [emis[ci_, :len(c.legs), :c.n_slots]
+            for ci_, c in enumerate(cells)]

@@ -89,10 +89,14 @@ class CarbonPlanner:
                  slot_s: float = 3600.0,
                  ci_fn: Optional[Callable[[NetworkPath, float], float]] = None,
                  field: Optional[CarbonField] = None,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 batch_backend: Optional[str] = None):
         if backend not in ("numpy", "jax"):
             raise ValueError(f"backend must be 'numpy' or 'jax', got "
                              f"{backend!r}")
+        if batch_backend not in (None, "numpy", "jax"):
+            raise ValueError(f"batch_backend must be None, 'numpy' or "
+                             f"'jax', got {batch_backend!r}")
         self.ftns = list(ftns)
         self._ftn_by_name = {f.name: f for f in self.ftns}
         self.throughput = throughput or ThroughputModel()
@@ -104,6 +108,18 @@ class CarbonPlanner:
         if backend == "jax":
             from repro.core.scheduler.grid_jax import JaxGridScorer
             self._jax_scorer = JaxGridScorer(self.field)
+        # batch_backend governs plan_batch's *full-scan* path only: "jax"
+        # routes whole fleets through the one-jit plan_batch_jax while
+        # single plan()/rescore() calls stay on ``backend`` (small arrays
+        # beat jit dispatch there). None follows ``backend``.
+        if batch_backend is None:
+            batch_backend = backend
+        if batch_backend == "jax":
+            from repro.core.scheduler.grid_jax import HAVE_JAX
+            if not HAVE_JAX:
+                raise ImportError("batch_backend='jax' needs jax; install "
+                                  "it or use batch_backend='numpy'")
+        self.batch_backend = batch_backend
         # drift hook (the fleet controller's forecast-shock nowcast): a
         # (path, start_times) -> multiplier-array applied to the forecast
         # emission integral, so re-plans during measured CI drift can
@@ -174,17 +190,14 @@ class CarbonPlanner:
     # --- vectorized fast path ---------------------------------------------
     def plan(self, job: TransferJob) -> Plan:
         deadline_t = job.submitted_t + job.sla.deadline_s
-        best: Optional[Plan] = None
-        n_alt = 0
+        best: Optional[Tuple] = None   # (cost, emis, t, ftn, src, paths,
+        n_alt = 0                      #  gbps, dur)
         for ftn, src, legs, gbps, dur in self._candidates(job):
             ts = self._slot_starts(job, dur, deadline_t)
             emis = np.zeros(ts.shape)
-            ci_acc = np.zeros(ts.shape)
-            for (a, b) in legs:
-                p = discover_path(a, b)
+            paths = [discover_path(a, b) for (a, b) in legs]
+            for p in paths:
                 emis += self._leg_emissions(p, ftn.power_model, job, ts, gbps)
-                ci_acc += self._ci_vec(p, ts, dur)
-            avg_ci = ci_acc / len(legs)
             feasible = ts + dur <= deadline_t + 1e-9
             if job.sla.carbon_budget_g is not None:
                 feasible &= emis <= job.sla.carbon_budget_g
@@ -193,26 +206,82 @@ class CarbonPlanner:
             if not feasible.any():
                 continue
             i = int(np.argmin(np.where(feasible, cost, np.inf)))
-            if best is None or cost[i] < best.cost:
-                best = Plan(
-                    job_uuid=job.uuid, start_t=float(ts[i]), source=src,
-                    ftn=ftn.name, path=discover_path(src, ftn.name),
-                    predicted_gbps=gbps, predicted_duration_s=dur,
-                    predicted_emissions_g=float(emis[i]),
-                    predicted_avg_ci=float(avg_ci[i]),
-                    predicted_carbonscore=carbonscore(
-                        job.size_bytes, float(avg_ci[i]), dur),
-                    cost=float(cost[i]), feasible=True)
+            if best is None or cost[i] < best[0]:
+                best = (float(cost[i]), float(emis[i]), float(ts[i]),
+                        ftn, src, paths, gbps, dur)
         if best is None:
             return self._fallback(job, n_alt)
-        return dataclasses.replace(best, alternatives=n_alt)
+        return self._finish_plan(job, best, n_alt)
+
+    def _finish_plan(self, job: TransferJob, best: Tuple,
+                     n_alt: int) -> Plan:
+        """Materialize the winning cell into a Plan. The avg-CI/carbonscore
+        annotations never enter the cost, so they are sampled once for the
+        winner here instead of for every candidate slot of the scan (~30%
+        of the old grid-scan cost); plan() and plan_batch_jax() share this
+        tail so both report bit-identical annotations."""
+        cost_i, emis_i, t_i, ftn, src, paths, gbps, dur = best
+        t_arr = np.array([t_i])
+        avg_ci = sum(float(self._ci_vec(p, t_arr, dur)[0])
+                     for p in paths) / len(paths)
+        return Plan(
+            job_uuid=job.uuid, start_t=t_i, source=src, ftn=ftn.name,
+            path=discover_path(src, ftn.name), predicted_gbps=gbps,
+            predicted_duration_s=dur, predicted_emissions_g=emis_i,
+            predicted_avg_ci=avg_ci,
+            predicted_carbonscore=carbonscore(job.size_bytes, avg_ci, dur),
+            cost=cost_i, feasible=True, alternatives=n_alt)
+
+    def _finish_plans(self, items: Sequence[Tuple[TransferJob, Tuple, int]]
+                      ) -> List[Plan]:
+        """:meth:`_finish_plan` for many winners at once: the midpoint
+        CI samples of every winner sharing a path evaluate in one
+        ``path_ci`` call (identical floats — same per-element math and
+        summation order as ``expected_transfer_ci``)."""
+        if self.ci_fn is not None or len(items) < 4:
+            return [self._finish_plan(job, best, n_alt)
+                    for job, best, n_alt in items]
+        by_path: dict = {}
+        legs_n: List[List[Tuple]] = []
+        for j, (job, best, n_alt) in enumerate(items):
+            _, _, t_i, _, _, paths, _, dur = best
+            row = []
+            for p in paths:
+                n = max(int(dur // 900.0), 1)
+                mids = t_i + (np.arange(n) + 0.5) * dur / n
+                key = (p.src, p.dst, p.hops)
+                ent = by_path.setdefault(key, (p, []))
+                ent[1].append(mids)
+                row.append((key, len(ent[1]) - 1, n))
+            legs_n.append(row)
+        vals: dict = {}
+        for key, (p, chunks) in by_path.items():
+            v = self.field.path_ci(p, np.concatenate(chunks))
+            bounds = np.cumsum([0] + [len(c) for c in chunks])
+            vals[key] = [v[bounds[i]:bounds[i + 1]]
+                         for i in range(len(chunks))]
+        out = []
+        for (job, best, n_alt), row in zip(items, legs_n):
+            cost_i, emis_i, t_i, ftn, src, paths, gbps, dur = best
+            avg_ci = sum(float(vals[key][slot].sum() / n)
+                         for key, slot, n in row) / len(row)
+            out.append(Plan(
+                job_uuid=job.uuid, start_t=t_i, source=src, ftn=ftn.name,
+                path=discover_path(src, ftn.name), predicted_gbps=gbps,
+                predicted_duration_s=dur, predicted_emissions_g=emis_i,
+                predicted_avg_ci=avg_ci,
+                predicted_carbonscore=carbonscore(job.size_bytes, avg_ci,
+                                                  dur),
+                cost=cost_i, feasible=True, alternatives=n_alt))
+        return out
 
     def plan_batch(self, jobs: Sequence[TransferJob],
                    previous: Optional[Sequence[Optional[Plan]]] = None,
                    drift_tol: Optional[float] = None) -> List[Plan]:
-        """Fleet-scale planning: one call, shared caches. The first plan
-        warms the path/noise/trace caches; the rest reuse them, so per-job
-        cost is dominated by the array ops alone.
+        """Fleet-scale planning: one call, shared caches. On the numpy
+        batch backend the first plan warms the path/noise/trace caches and
+        the rest reuse them; with ``batch_backend="jax"`` the whole fleet's
+        grids are stacked into one jitted :meth:`plan_batch_jax` call.
 
         Incremental mode (the control plane's forecast-drift path): with
         ``previous`` plans and a ``drift_tol``, each job's old grid cell is
@@ -223,20 +292,216 @@ class CarbonPlanner:
         is the drift metric: the w_perf term is measured from the job's
         submission base, which a queue rebase shifts without any real
         change in conditions. ``drift_tol=0.0`` degenerates to a full
-        re-plan of every job whose conditions changed at all.
+        re-plan of every job whose conditions changed at all — and the
+        drifted jobs are themselves re-planned as one batch.
         """
         if previous is None or drift_tol is None:
-            return [self.plan(job) for job in jobs]
-        out: List[Plan] = []
-        for job, prev in zip(jobs, previous):
-            re = self.rescore(job, prev) if prev is not None else None
+            return self._plan_batch_full(list(jobs))
+        jobs, previous = list(jobs), list(previous)
+        out: List[Optional[Plan]] = [None] * len(jobs)
+        miss: List[int] = []
+        for i, (prev, re) in enumerate(zip(previous,
+                                           self.rescore_batch(jobs,
+                                                              previous))):
             if (re is not None and re.feasible
                     and abs(re.predicted_emissions_g
                             - prev.predicted_emissions_g)
                     <= drift_tol * max(prev.predicted_emissions_g, 1e-12)):
-                out.append(re)
+                out[i] = re
             else:
-                out.append(self.plan(job))
+                miss.append(i)
+        if miss:
+            for i, plan in zip(miss,
+                               self._plan_batch_full([jobs[i]
+                                                      for i in miss])):
+                out[i] = plan
+        return out                     # type: ignore[return-value]
+
+    # below these sizes the jitted batch path's fixed dispatch cost loses
+    # to the numpy per-job scan, so small sweeps stay on the oracle.
+    # Re-scores are single-cell (one slot, one anchor each): the kernel's
+    # per-anchor lattice only amortizes on very large sweeps.
+    _BATCH_MIN_JOBS = 8
+    _RESCORE_MIN_CELLS = 512
+
+    def _plan_batch_full(self, jobs: Sequence[TransferJob]) -> List[Plan]:
+        if self.batch_backend == "jax" and len(jobs) >= self._BATCH_MIN_JOBS:
+            return self.plan_batch_jax(jobs)
+        return [self.plan(job) for job in jobs]
+
+    def plan_batch_jax(self, jobs: Sequence[TransferJob], *,
+                       shard: Optional[bool] = None) -> List[Plan]:
+        """One-jit fleet planning: every job's (FTN x replica x slot) grid
+        is stacked into a single padded/masked cell table and scored by one
+        ``jax.jit`` call per memory chunk (``grid_jax.batch_cell_emissions``
+        — vmap over the job-cell axis, optional shard_map across devices).
+
+        The numpy :meth:`plan_batch` is the pinned oracle: this path must
+        pick the same grid cells with emissions within 1e-4 relative
+        (in practice ~1e-7 — f32 CI chain, f64 time math). Jobs whose
+        layout the batch kernel cannot host (non-dt-aligned slots, a rate
+        grid past the per-cell cap) fall back to the numpy :meth:`plan`.
+        ``shard`` is forwarded to the kernel's device-sharding gate.
+        """
+        from repro.core.scheduler.grid_jax import (CellTask, LegTask,
+                                                   _MAX_GRID,
+                                                   batch_cell_emissions)
+        dt_s = 60.0
+        stride = self.slot_s / dt_s
+        if stride != int(stride) or stride <= 0:
+            return [self.plan(job) for job in jobs]
+        stride = int(stride)
+        sender = HOST_PROFILES["storage_frontend"]
+        cells: List[CellTask] = []
+        meta: List[Optional[List[Tuple]]] = []
+        wcache: dict = {}              # (path, recv, gbps, par, con) -> w
+
+        def leg_w(p, pm, gbps, par, con):
+            k = (id(p), pm.name, gbps, par, con)
+            w = wcache.get(k)
+            if w is None:
+                w = wcache[k] = self.field.device_weight_fn(
+                    p, sender, pm, par, con)(gbps)
+            return w
+
+        for job in jobs:
+            deadline_t = job.submitted_t + job.sla.deadline_s
+            jcells: Optional[List[Tuple]] = []
+            job_cell0 = len(cells)
+            for ftn, src, legs, gbps, dur in self._candidates(job):
+                ts = self._slot_starts(job, dur, deadline_t)
+                paths = [discover_path(a, b) for (a, b) in legs]
+                if gbps <= 0:          # inf emissions: never feasible
+                    jcells.append((None, ftn, src, paths, gbps, dur, ts))
+                    continue
+                n_steps = max(int(math.ceil(dur / dt_s - 1e-12)), 1)
+                if (len(ts) - 1) * stride + n_steps > _MAX_GRID:
+                    jcells = None      # degenerate rate grid: numpy plan()
+                    del cells[job_cell0:]   # drop its half-built cells
+                    break
+                jcells.append((len(cells), ftn, src, paths, gbps, dur, ts))
+                cells.append(CellTask(
+                    legs=tuple(LegTask(
+                        path=p, anchor=float(ts[0]),
+                        w_dev=leg_w(p, ftn.power_model, gbps,
+                                    job.parallelism, job.concurrency))
+                        for p in paths),
+                    n_slots=len(ts), n_steps=n_steps,
+                    rem_s=dur - (n_steps - 1) * dt_s))
+            meta.append(jcells)
+        tables = batch_cell_emissions(self.field, cells, dt_s=dt_s,
+                                      slot_stride=stride, shard=shard) \
+            if cells else []
+        plans: List[Optional[Plan]] = []
+        winners: List[Tuple[int, Tuple[TransferJob, Tuple, int]]] = []
+        for job, jcells in zip(jobs, meta):
+            if jcells is None:
+                plans.append(self.plan(job))
+                continue
+            deadline_t = job.submitted_t + job.sla.deadline_s
+            best: Optional[Tuple] = None
+            n_alt = 0
+            for idx, ftn, src, paths, gbps, dur, ts in jcells:
+                n_alt += len(ts)
+                if idx is None:
+                    continue
+                tab = tables[idx]      # (n_legs, n_slots)
+                if self.emission_scale_fn is not None:
+                    tab = tab * np.stack(
+                        [self.emission_scale_fn(p, ts) for p in paths])
+                emis = tab.sum(axis=0)
+                feasible = ts + dur <= deadline_t + 1e-9
+                if job.sla.carbon_budget_g is not None:
+                    feasible &= emis <= job.sla.carbon_budget_g
+                cost = _plan_cost(job.sla, emis, ts + dur - job.submitted_t)
+                if not feasible.any():
+                    continue
+                i = int(np.argmin(np.where(feasible, cost, np.inf)))
+                if best is None or cost[i] < best[0]:
+                    best = (float(cost[i]), float(emis[i]), float(ts[i]),
+                            ftn, src, paths, gbps, dur)
+            if best is None:
+                plans.append(self._fallback(job, n_alt))
+            else:
+                winners.append((len(plans), (job, best, n_alt)))
+                plans.append(None)     # filled by the batched finisher
+        for (slot, _), plan in zip(winners,
+                                   self._finish_plans([w for _, w
+                                                       in winners])):
+            plans[slot] = plan
+        return plans                   # type: ignore[return-value]
+
+    def rescore_batch(self, jobs: Sequence[TransferJob],
+                      previous: Sequence[Optional[Plan]]
+                      ) -> List[Optional[Plan]]:
+        """:meth:`rescore` for a whole sweep. On the jax batch backend all
+        surviving cells (one slot each) score in one ``batch_cell_emissions``
+        call (within float noise, ~1e-7, of per-job rescore — a sweep with
+        ``drift_tol=0.0`` should therefore use the numpy backend, where
+        re-scores are bit-stable); otherwise falls back to per-job
+        :meth:`rescore`. ``None`` entries mean the cell no longer exists
+        and the caller must full-plan."""
+        if self.batch_backend != "jax" \
+                or len(jobs) < self._RESCORE_MIN_CELLS:
+            return [self.rescore(j, p) if p is not None else None
+                    for j, p in zip(jobs, previous)]
+        from repro.core.scheduler.grid_jax import (CellTask, LegTask,
+                                                   _MAX_GRID,
+                                                   batch_cell_emissions)
+        dt_s = 60.0
+        sender = HOST_PROFILES["storage_frontend"]
+        out: List[Optional[Plan]] = [None] * len(jobs)
+        cells: List[CellTask] = []
+        meta: List[Tuple] = []
+        for i, (job, prev) in enumerate(zip(jobs, previous)):
+            if prev is None:
+                continue
+            ftn = self._ftn_by_name.get(prev.ftn)
+            if ftn is None or prev.start_t < job.submitted_t - 1e-9:
+                continue               # stale cell: caller full-plans
+            legs = [(prev.source, ftn.name)]
+            if ftn.name != job.dst:
+                legs.append((ftn.name, job.dst))
+            gbps = min(self.throughput.predict(a, b, job.parallelism,
+                                               job.concurrency)
+                       for a, b in legs)
+            gbps = min(gbps, ftn.max_gbps)
+            dur = job.size_bytes * 8.0 / (gbps * 1e9)
+            n_steps = max(int(math.ceil(dur / dt_s - 1e-12)), 1)
+            if n_steps > _MAX_GRID:
+                out[i] = self.rescore(job, prev)
+                continue
+            paths = [discover_path(a, b) for (a, b) in legs]
+            meta.append((i, job, prev, ftn, gbps, dur, paths))
+            cells.append(CellTask(
+                legs=tuple(LegTask(
+                    path=p, anchor=float(prev.start_t),
+                    w_dev=self.field.device_weight_fn(
+                        p, sender, ftn.power_model, job.parallelism,
+                        job.concurrency)(gbps)) for p in paths),
+                n_slots=1, n_steps=n_steps,
+                rem_s=dur - (n_steps - 1) * dt_s))
+        if cells:
+            tables = batch_cell_emissions(self.field, cells, dt_s=dt_s,
+                                          slot_stride=1)
+            for (i, job, prev, ftn, gbps, dur, paths), tab in zip(meta,
+                                                                  tables):
+                ts = np.array([prev.start_t])
+                if self.emission_scale_fn is not None:
+                    tab = tab * np.stack(
+                        [self.emission_scale_fn(p, ts) for p in paths])
+                emis = float(tab.sum())
+                deadline_t = job.submitted_t + job.sla.deadline_s
+                feasible = prev.start_t + dur <= deadline_t + 1e-9
+                if job.sla.carbon_budget_g is not None:
+                    feasible = feasible and emis <= job.sla.carbon_budget_g
+                cost = float(_plan_cost(job.sla, emis,
+                                        prev.start_t + dur
+                                        - job.submitted_t))
+                out[i] = dataclasses.replace(
+                    prev, predicted_gbps=gbps, predicted_duration_s=dur,
+                    predicted_emissions_g=emis, cost=cost,
+                    feasible=bool(feasible))
         return out
 
     def rescore(self, job: TransferJob, prev: Plan) -> Optional[Plan]:

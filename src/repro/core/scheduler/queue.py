@@ -34,15 +34,23 @@ class CarbonAwareQueue:
             JobReady(t=max(plan.start_t, self.events.now), job=job,
                      plan=plan))
 
-    def submit(self, job: TransferJob) -> Plan:
-        plan = self.planner.plan(job)
+    def submit(self, job: TransferJob,
+               plan: Optional[Plan] = None) -> Plan:
+        """Admit one job: plan it (unless the caller already did — the
+        sharded fleet's batched admission passes precomputed plans) and
+        schedule its JobReady at the chosen start slot."""
+        if plan is None:
+            plan = self.planner.plan(job)
         self._push(job, plan)
         return plan
 
     def submit_many(self, jobs: List[TransferJob]) -> List[Plan]:
-        """Fleet admission: every plan shares the planner's CarbonField
-        caches; one enqueue path (submit) keeps the ordering logic single."""
-        return [self.submit(job) for job in jobs]
+        """Fleet admission: all grids scored in one ``plan_batch`` call
+        (one jitted sweep on the jax batch backend; shared CarbonField
+        caches on numpy); one enqueue path (submit) keeps the ordering
+        logic single."""
+        plans = self.planner.plan_batch(jobs)
+        return [self.submit(job, plan) for job, plan in zip(jobs, plans)]
 
     def claim(self, ev: JobReady) -> None:
         """A driver popped this queue's JobReady from a shared loop: drop it

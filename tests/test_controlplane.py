@@ -194,6 +194,105 @@ def test_rescore_rejects_stale_cells():
     assert pl.rescore(late, plan) is None   # start slot is in the past
 
 
+# --- batched stepping vs event-time accounting -------------------------------
+def test_shock_mid_batch_is_scored_identically():
+    """Emission accounting must be invariant to step batching: a shock
+    firing *inside* a step batch (between the StepTick that started it
+    and the completion) has to scale exactly the steps it covers. With a
+    24 h migration interval the whole transfer runs as one batch; with
+    30 s checks it runs step-by-step — same trajectory, and the actual
+    emissions must agree to float rounding (the flush happens at the
+    JobComplete event, after the shock popped)."""
+    # a 1800 s deadline leaves exactly one feasible slot (start now), so
+    # the ~423 s transfer cannot be time-shifted around the shock
+    def run_with(check_every_s, shock):
+        fc = FleetController([FTN("tacc", "cascade_lake", 10.0)],
+                             migrate_check_every_s=check_every_s)
+        fc.submit(TransferJob("sb", 500e9, ("uc",), "tacc",
+                              SLA(deadline_s=1800.0), T0))
+        if shock:
+            fc.inject_shock(T0 + 120.0, 6.0, duration_s=3600.0)
+        return fc.run()
+
+    batched = run_with(24 * 3600.0, True)
+    stepped = run_with(30.0, True)
+    assert batched.n_completed == stepped.n_completed == 1
+    assert batched.n_steps == stepped.n_steps
+    assert batched.total_actual_g == pytest.approx(
+        stepped.total_actual_g, rel=1e-9)
+    # sanity: the shock actually moved the number (6x from 120 s in must
+    # beat the unshocked run by a wide margin)
+    clean = run_with(24 * 3600.0, False)
+    assert batched.total_actual_g > 2.0 * clean.total_actual_g
+
+
+def test_run_until_freezes_batched_steps_at_horizon():
+    """run(until) must stop batched stepping at the horizon exactly like
+    per-event stepping: the job stays in flight, its state within one
+    engine step of the cut, and the report still settles its emissions."""
+    fc = FleetController([FTN("tacc", "cascade_lake", 10.0)],
+                         migrate_check_every_s=24 * 3600.0)
+    fc.submit(TransferJob("hz", 500e9, ("uc",), "tacc",
+                          SLA(deadline_s=1800.0), T0))   # one slot: now
+    report = fc.run(until=T0 + 120.0)
+    assert report.n_completed == 0
+    rec = fc._records["hz"]
+    assert rec.state.t_now <= T0 + 120.0 + fc.engine.dt_s + 1e-6
+    assert not rec.pending                 # report settled the segment
+    assert report.total_actual_g > 0
+
+
+# --- bottleneck-leg observation attribution ---------------------------------
+def test_leg2_bottleneck_feeds_throughput_model():
+    """When the relay's second hop binds the rate, the achieved throughput
+    must teach (relay, dst) — the ROADMAP open item: leg-2 learning was
+    forfeited before. The 200 Gbps site_ca -> site_or leg never binds; the
+    100 Gbps site_or -> tacc leg does."""
+    fc = FleetController([FTN("site_or", "tpu_host", 200.0)])
+    fc.submit(TransferJob("l2", 400e9, ("site_ca",), "tacc",
+                          SLA(deadline_s=6 * 3600.0), T0))
+    report = fc.run()
+    assert report.n_completed == 1
+    corr = fc.engine.model.correction
+    assert ("site_or", "tacc") in corr
+    assert ("site_ca", "site_or") not in corr
+
+
+def test_ftn_nic_cap_observes_neither_leg():
+    """An FTN cap below both legs binds the stream itself: the achieved
+    rate says nothing about either (src, dst) pair and must not poison
+    the learned corrections."""
+    fc = FleetController([FTN("site_or", "tpu_host", 1.0)])
+    fc.submit(TransferJob("cap", 10e9, ("site_ca",), "tacc",
+                          SLA(deadline_s=12 * 3600.0), T0))
+    report = fc.run()
+    assert report.n_completed == 1
+    assert fc.engine.model.correction == {}
+
+
+def test_device_weight_fn_matches_device_weights():
+    """The baked-route weight closure is the controller's per-step power
+    model: it must be float-identical to _device_weights for scalars and
+    stack the same values for gbps vectors."""
+    import numpy as np
+
+    from repro.core.carbon.energy import HOST_PROFILES
+    from repro.core.carbon.field import default_field
+    from repro.core.carbon.path import discover_path
+
+    f = default_field()
+    p = discover_path("uc", "tacc")
+    s, r = HOST_PROFILES["storage_frontend"], HOST_PROFILES["cascade_lake"]
+    fn = f.device_weight_fn(p, s, r, 4, 2)
+    for g in (0.05, 1.2, 7.7, 9.99, 40.0):
+        assert fn(g).tolist() == f._device_weights(p, s, r, g, 4, 2).tolist()
+    gs = np.array([0.05, 1.2, 7.7])
+    W = fn(gs)
+    assert W.shape == (p.n_hops, 3)
+    for j, g in enumerate(gs):
+        assert W[:, j].tolist() == fn(float(g)).tolist()
+
+
 # --- jax grid-scoring backend ----------------------------------------------
 def test_jax_backend_matches_numpy_oracle():
     jax = pytest.importorskip("jax")  # noqa: F841
@@ -224,3 +323,80 @@ def test_jax_backend_batch_matches_numpy_oracle():
 def test_planner_rejects_unknown_backend():
     with pytest.raises(ValueError):
         CarbonPlanner(FTNS, backend="tpu")
+    with pytest.raises(ValueError):
+        CarbonPlanner(FTNS, batch_backend="tpu")
+
+
+# --- one-jit fleet batch (plan_batch_jax) ------------------------------------
+def _batch_jobs(n=24):
+    """Mixed fleet: spread anchors, two replica sets, varied sizes and
+    deadlines — enough shape diversity to exercise padding/masking."""
+    return [TransferJob(f"pb{i}", (60 + (53 * i) % 900) * 1e9,
+                        ("uc", "site_ne") if i % 3 else ("uc",), "tacc",
+                        SLA(deadline_s=(5 + i % 9) * 3600.0,
+                            w_perf=0.2 if i % 2 else 0.0),
+                        T0 + (i % 7) * 1800.0 + (i % 3) * 17.0)
+            for i in range(n)]
+
+
+def test_plan_batch_jax_matches_numpy_oracle():
+    """Acceptance: the one-jit batched fleet path picks the same grid
+    cells as the numpy plan_batch oracle with emissions within 1e-4
+    relative (in practice ~1e-7)."""
+    pytest.importorskip("jax")
+    ref = CarbonPlanner(FTNS).plan_batch(_batch_jobs())
+    fast = CarbonPlanner(FTNS,
+                         batch_backend="jax").plan_batch_jax(_batch_jobs())
+    for a, b in zip(ref, fast):
+        assert (a.start_t, a.source, a.ftn) == (b.start_t, b.source, b.ftn)
+        assert b.predicted_emissions_g == pytest.approx(
+            a.predicted_emissions_g, rel=1e-4)
+        assert b.predicted_avg_ci == pytest.approx(a.predicted_avg_ci,
+                                                   rel=1e-9)
+        assert b.cost == pytest.approx(a.cost, rel=1e-4)
+        assert a.alternatives == b.alternatives
+
+
+def test_plan_batch_routes_through_jax_when_configured():
+    pytest.importorskip("jax")
+    jobs = _batch_jobs(12)
+    pl = CarbonPlanner(FTNS, batch_backend="jax")
+    ref = CarbonPlanner(FTNS).plan_batch(jobs)
+    for a, b in zip(ref, pl.plan_batch(jobs)):
+        assert (a.start_t, a.source, a.ftn) == (b.start_t, b.source, b.ftn)
+
+
+def test_plan_batch_jax_infeasible_falls_back_like_numpy():
+    """A job no slot can satisfy must yield the same SLA-first fallback
+    plan (start now, direct path, feasible=False) as the numpy oracle."""
+    pytest.importorskip("jax")
+    job = TransferJob("late", 2000e9, ("uc",), "tacc",
+                      SLA(deadline_s=120.0), T0)
+    ref = CarbonPlanner(FTNS).plan(job)
+    fast = CarbonPlanner(FTNS, batch_backend="jax").plan_batch_jax([job])[0]
+    assert not ref.feasible and not fast.feasible
+    assert (ref.start_t, ref.source, ref.ftn) == \
+        (fast.start_t, fast.source, fast.ftn)
+    assert fast.predicted_emissions_g == pytest.approx(
+        ref.predicted_emissions_g, rel=1e-9)
+
+
+def test_plan_batch_jax_applies_emission_scale_hook():
+    """The controller's forecast-shock nowcast multiplies the forecast
+    integral per leg; the batched path must honor it like plan() does."""
+    pytest.importorskip("jax")
+    import numpy as np
+
+    def scale(path, ts):
+        f = 4.0 if any(h.zone == "CA-QC" for h in path.hops) else 1.0
+        return np.full(np.shape(ts), f)
+
+    jobs = _batch_jobs(10)
+    ref_pl = CarbonPlanner(FTNS)
+    ref_pl.emission_scale_fn = scale
+    jax_pl = CarbonPlanner(FTNS, batch_backend="jax")
+    jax_pl.emission_scale_fn = scale
+    for a, b in zip(ref_pl.plan_batch(jobs), jax_pl.plan_batch_jax(jobs)):
+        assert (a.start_t, a.source, a.ftn) == (b.start_t, b.source, b.ftn)
+        assert b.predicted_emissions_g == pytest.approx(
+            a.predicted_emissions_g, rel=1e-4)
