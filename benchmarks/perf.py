@@ -165,8 +165,8 @@ def _fleet_workload(n: int = 400):
 
 def _write_fleet_bench(section: str, out: Dict) -> None:
     """Merge one bench section into BENCH_fleet.json (the file holds one
-    object per bench: "fleet_loop" and "fleet_sharded" — see
-    docs/benchmarks.md for every field)."""
+    object per bench: "fleet_loop", "fleet_sharded" and "fleet_streaming"
+    — see docs/benchmarks.md for every field)."""
     path = pathlib.Path(__file__).resolve().parent.parent / \
         "BENCH_fleet.json"
     data = {}
@@ -175,8 +175,9 @@ def _write_fleet_bench(section: str, out: Dict) -> None:
             data = json.loads(path.read_text())
         except ValueError:
             data = {}
-    if not isinstance(data, dict) or "fleet_loop" not in data \
-            and "fleet_sharded" not in data:
+    if not isinstance(data, dict) or not any(
+            k in data for k in ("fleet_loop", "fleet_sharded",
+                                "fleet_streaming")):
         data = {}                      # migrate the old flat layout
     data[section] = out
     path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
@@ -295,6 +296,88 @@ def fleet_sharded() -> Dict[str, float]:
     except (OSError, ValueError, KeyError, ZeroDivisionError):
         pass
     _write_fleet_bench("fleet_sharded", out)
+    return out
+
+
+def fleet_streaming() -> Dict[str, float]:
+    """Streaming-gateway bench: the same 400-job workload as
+    ``fleet_sharded``, but delivered *open-loop* — an arrival stream
+    through the :class:`StreamingGateway` in front of a 4-shard fleet.
+    Arrivals accumulate into 15-min micro-batches, each planned by one
+    ``plan_batch`` call and admitted at the batch close (the reported
+    admission latency), so the wall covers streaming admission + the
+    shard runs end to end.
+
+    Writes the "fleet_streaming" section of BENCH_fleet.json. The
+    sustained-throughput floor (the CI gate under CHECK_BENCH=1): the
+    gateway must hold >= 0.8x a 4-shard batch-mode (submit_many) run
+    co-measured in THIS process — streaming admission is allowed to cost
+    at most 20% of batch-mode throughput. The comparison is in-process on
+    purpose: container CPU wall drifts ±40% between processes, which
+    would make a cross-file ratio gate flaky."""
+    import time as _time
+
+    from repro.core.controlplane import ShardedFleet
+    from repro.core.controlplane.streaming import StreamingGateway
+    from repro.core.workloads.generators import as_stream
+
+    # warm the batch kernels once (XLA compilation is per-process)
+    ftns, jobs, shock = _fleet_workload()
+    warm = ShardedFleet(ftns, n_shards=2, migration_threshold=250.0)
+    warm.submit_many(jobs[:64])
+    warm.inject_shock(**shock)
+    warm.run()
+
+    # co-measured batch-mode reference (the fleet_sharded 4-shard shape)
+    batch_best = None
+    for _ in range(2):
+        ftns, jobs, shock = _fleet_workload()
+        sf = ShardedFleet(ftns, n_shards=4, migration_threshold=250.0)
+        t0 = _time.perf_counter()
+        sf.submit_many(jobs)
+        sf.inject_shock(**shock)
+        brep = sf.run()
+        bwall = _time.perf_counter() - t0
+        if batch_best is None or bwall < batch_best[0]:
+            batch_best = (bwall, brep.n_completed)
+    batch_jobs_per_s = batch_best[1] / batch_best[0]
+
+    best = None
+    for _ in range(3):
+        ftns, jobs, shock = _fleet_workload()
+        sf = ShardedFleet(ftns, n_shards=4, migration_threshold=250.0)
+        sf.inject_shock(**shock)
+        gw = StreamingGateway(sf, window_s=900.0, max_batch=64)
+        t0 = _time.perf_counter()
+        rep = gw.run(as_stream(jobs))
+        wall = _time.perf_counter() - t0
+        if best is None or wall < best[0]:
+            best = (wall, rep, gw.stats())
+    wall, rep, stats = best
+    audit_rel = abs(rep.ledger_total_g - rep.total_actual_g) \
+        / max(rep.total_actual_g, 1e-12)
+    ratio = rep.n_completed / wall / batch_jobs_per_s
+    out = {"jobs": rep.n_jobs,
+           "completed": rep.n_completed,
+           "jobs_per_s": round(rep.n_completed / wall, 1),
+           "wall_s": round(wall, 2),
+           "n_batches": stats.n_batches,
+           "mean_batch": round(stats.mean_batch, 1),
+           "max_batch": stats.max_batch,
+           "admission_p50_s": round(stats.admission_p50_s, 1),
+           "admission_p95_s": round(stats.admission_p95_s, 1),
+           "window_s": 900.0,
+           "migrations": rep.migrations,
+           "sla_misses": rep.sla_misses,
+           "ledger_audit_rel_err": audit_rel,
+           "batch_mode_jobs_per_s": round(batch_jobs_per_s, 1),
+           "vs_batch_mode_x": round(ratio, 2)}
+    _write_fleet_bench("fleet_streaming", out)
+    if ratio < 0.8:                    # gate on the unrounded ratio
+        raise RuntimeError(
+            f"fleet_streaming sustained-throughput floor: "
+            f"{out['jobs_per_s']} jobs/s is {ratio:.3f}x the co-measured "
+            f"batch-mode {round(batch_jobs_per_s, 1)} jobs/s (floor 0.8x)")
     return out
 
 

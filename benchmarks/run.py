@@ -28,6 +28,7 @@ def _registry():
         ("planner_scan", P.planner_scan),
         ("fleet_loop", P.fleet_loop),
         ("fleet_sharded", P.fleet_sharded),
+        ("fleet_streaming", P.fleet_streaming),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

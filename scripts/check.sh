@@ -3,8 +3,11 @@
 # subdirectory; mirrors exactly what CI runs. The docs gate (intra-repo
 # markdown links + docs/ snippet execution) always runs; set CHECK_BENCH=1
 # to follow the tests with the bench smoke (planner grid scan + fleet
-# control loop + sharded scale-out sweep), refreshing BENCH_planner.json /
-# BENCH_fleet.json.
+# control loop + sharded scale-out sweep + streaming gateway, which gates
+# a sustained-throughput floor of 0.8x the co-measured sharded run),
+# refreshing BENCH_planner.json / BENCH_fleet.json, and with the
+# examples/fleet_stream.py end-to-end scenario run (backfill on, merged
+# ledger audit asserted).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
@@ -16,4 +19,7 @@ if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
     --only fleet_loop
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_sharded
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only fleet_streaming
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/fleet_stream.py
 fi

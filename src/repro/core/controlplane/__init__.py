@@ -21,10 +21,14 @@ def __getattr__(name):
     if name == "ShardedFleet":
         from repro.core.controlplane import sharded
         return sharded.ShardedFleet
+    if name in ("StreamingGateway", "GatewayStats"):
+        from repro.core.controlplane import streaming
+        return getattr(streaming, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Event", "EventLoop", "JobArrival", "JobReady", "StepTick", "ReplanTick",
     "MigrationCheck", "ForecastShock", "JobComplete",
     "FleetController", "FleetReport", "JobOutcome", "ShardedFleet",
+    "StreamingGateway", "GatewayStats",
 ]

@@ -246,6 +246,10 @@ class FleetController:
         self.migrate_check_every_s = migrate_check_every_s
         self.drift_tol = drift_tol
         self.max_migrations_per_job = max_migrations_per_job
+        # streaming drivers (core.controlplane.streaming) hook completions
+        # here: each callable sees (t, job) at the JobComplete event, in
+        # event-time order — the backfill policy's capacity signal
+        self.completion_hooks: List[Callable[[float, TransferJob], None]] = []
         self._records: Dict[str, _JobRecord] = {}
         self._active: Dict[str, _JobRecord] = {}
         self._shocks: List[ForecastShock] = []
@@ -255,6 +259,7 @@ class FleetController:
         self._until = float("inf")
         self._t_first: Optional[float] = None
         self._t_last = 0.0
+        self._wall_s = 0.0             # accumulated pump() wall time
         self.migrations = 0
         self.replan_events = 0
         self.plans_changed = 0
@@ -263,17 +268,29 @@ class FleetController:
         self.n_events = 0
 
     # --- submission / drift injection --------------------------------------
-    def submit(self, job: TransferJob, plan: Optional[Plan] = None) -> None:
+    def submit(self, job: TransferJob, plan: Optional[Plan] = None,
+               at: Optional[float] = None) -> None:
         """Enqueue one arrival. ``plan`` optionally carries an
         admission-time plan (the sharded fleet's batched admission); None
-        means the queue plans the job when the arrival fires."""
+        means the queue plans the job when the arrival fires. ``at``
+        schedules the arrival later than its submission — a streaming
+        gateway's micro-batch close delay (never earlier: the clock
+        floor still applies)."""
         self._outstanding += 1
-        self.events.push(JobArrival(t=max(job.submitted_t, self.events.now),
+        t = job.submitted_t if at is None else max(at, job.submitted_t)
+        self.events.push(JobArrival(t=max(t, self.events.now),
                                     job=job, plan=plan))
 
-    def submit_many(self, jobs: Sequence[TransferJob]) -> None:
-        for job in jobs:
-            self.submit(job)
+    def submit_many(self, jobs: Sequence[TransferJob],
+                    plans: Optional[Sequence[Optional[Plan]]] = None) -> None:
+        """Enqueue many arrivals; ``plans`` optionally carries precomputed
+        admission plans positionally (a gateway's micro-batched planning —
+        parity with :meth:`submit`'s ``plan=``)."""
+        if plans is not None and len(plans) != len(jobs):
+            raise ValueError(f"plans ({len(plans)}) must match jobs "
+                             f"({len(jobs)})")
+        for i, job in enumerate(jobs):
+            self.submit(job, plan=plans[i] if plans is not None else None)
 
     def inject_shock(self, t: float, factor: float, *,
                      duration_s: float = float("inf"),
@@ -329,18 +346,51 @@ class FleetController:
 
     # --- the loop -----------------------------------------------------------
     def run(self, until: Optional[float] = None) -> FleetReport:
+        """Drain to ``until`` (or fully) and report. ``run`` is a terminal
+        :meth:`pump` + :meth:`_report`; a streaming driver pumps in
+        watermark increments instead and calls ``run`` once at the end —
+        the report's wall is the accumulated pump time either way."""
+        self.pump(until)
+        return self._report(self._wall_s)
+
+    def pump(self, until: Optional[float] = None, *,
+             strict: bool = False,
+             horizon: Optional[float] = None) -> int:
+        """Resumable drain: process events with ``t <= until`` (or
+        ``t < until`` when ``strict`` — the streaming gateway's watermark
+        cut, so a micro-batch anchored *at* the watermark can still be
+        admitted ahead of same-instant runtime events). Unlike a terminal
+        ``run``, nothing past the cut is popped or dropped, so pumping in
+        increments replays exactly the run a single drain would have —
+        pinned by ``tests/test_streaming.py``. Returns the number of
+        events processed.
+
+        ``horizon`` is the in-flight *step-batch* clamp and defaults to
+        ``until`` (the terminal-run freeze). A streaming driver passes
+        its own run horizon instead: a watermark cut must not fragment
+        step batches — that would change the event count vs a batch run —
+        while the final horizon still freezes transfers exactly where a
+        terminal ``run(until)`` would."""
         wall0 = time.perf_counter()
-        self._until = float("inf") if until is None else until
-        while True:
-            ev = self.events.pop()
-            if ev is None or (until is not None and ev.t > until):
-                break
-            self.n_events += 1
-            if self._t_first is None:
-                self._t_first = ev.t
-            self._t_last = max(self._t_last, ev.t)
-            self._HANDLERS[type(ev)](self, ev)
-        return self._report(time.perf_counter() - wall0)
+        if horizon is None:
+            horizon = until
+        self._until = float("inf") if horizon is None else horizon
+        n0 = self.n_events
+        try:
+            while True:
+                t = self.events.peek_t()
+                if t is None or (until is not None
+                                 and (t >= until if strict else t > until)):
+                    break
+                ev = self.events.pop()
+                self.n_events += 1
+                if self._t_first is None:
+                    self._t_first = ev.t
+                self._t_last = max(self._t_last, ev.t)
+                self._HANDLERS[type(ev)](self, ev)
+        finally:
+            self._wall_s += time.perf_counter() - wall0
+        return self.n_events - n0
 
     def _arm_ticks(self, t: float) -> None:
         if not self._ticks_armed:
@@ -577,6 +627,8 @@ class FleetController:
             self.engine.model.observe(*rec.observe_leg,
                                       rec.job.parallelism,
                                       rec.job.concurrency, achieved)
+        for hook in self.completion_hooks:
+            hook(ev.t, rec.job)
 
     def _on_replan(self, ev: ReplanTick) -> None:
         if len(self.queue):

@@ -100,8 +100,12 @@ class ShardedFleet:
         return _stable_hash(key) % self.n_shards
 
     # --- the FleetController API, fleet-wide -------------------------------
-    def submit(self, job: TransferJob) -> None:
-        self.controllers[self.shard_of(job)].submit(job)
+    def submit(self, job: TransferJob, plan=None, at=None) -> None:
+        """Route one arrival to its shard; ``plan`` optionally carries a
+        precomputed admission plan and ``at`` a deferred arrival instant
+        (the streaming gateway's micro-batched admission), same as
+        :meth:`FleetController.submit`."""
+        self.controllers[self.shard_of(job)].submit(job, plan=plan, at=at)
 
     def submit_many(self, jobs: Sequence[TransferJob]) -> None:
         """Batched admission: the *whole* fleet's (job x FTN x replica x

@@ -1,0 +1,357 @@
+"""Streaming fleet gateway: online micro-batched admission + backfill.
+
+``submit_many`` assumes the whole fleet is known up front; real fleets see
+an *arrival stream* and must admit online against a stochastic carbon
+field. The :class:`StreamingGateway` sits in front of a
+:class:`FleetController` or :class:`ShardedFleet` and closes that gap:
+
+* **micro-batched admission** — arrivals accumulate into micro-batches
+  (up to ``window_s`` of arrival time or ``max_batch`` jobs); a batch
+  *closes* on its window timer (or at its last member's arrival when
+  ``max_batch`` filled it early), is planned by ONE ``plan_batch`` call
+  on the gateway's admission planner (the jax one-jit sweep once the
+  batch is big enough — never per-job grid scoring on the hot path) and
+  handed to the controllers as plan-carrying ``JobArrival`` events AT the
+  close instant — the member's micro-batch admission latency, which the
+  gateway reports (p50/p95/max);
+* **watermark rule** — before a batch closing at ``t_close`` is admitted,
+  every controller is pumped *strictly below* ``t_close``
+  (``FleetController.pump(t_close, strict=True)``). Admissions therefore
+  always land at or ahead of the clock — the monotone-clock contract of
+  ``core.controlplane.events`` is preserved by construction — and with
+  ``window_s=0`` the close IS the arrival instant, so a streamed run
+  replays a ``submit_many`` run of the same materialized list event for
+  event;
+* **capacity-gated deferral + backfill** — with ``max_inflight`` set, the
+  gateway admits at most that many uncompleted jobs and parks the rest in
+  a deferred set. A hook on ``JobComplete`` frees capacity and promotes
+  deferred jobs: FIFO order by default, and with ``backfill=True`` the
+  deferred set is *re-scored* (one batched plan over submission-rebased
+  copies) and the projected-greenest job is promoted instead — unless a
+  job's remaining slack has gone critical, in which case the SLA guard
+  admits the most urgent job first, exactly like migration's
+  greener-but-late veto.
+
+The gateway plans with a dedicated admission planner (base-capacity
+throughput model; for a :class:`ShardedFleet` the fleet-level planner,
+which already prices pre-announced shocks). Admission planning is a pure
+function of the job and the announced shock schedule, which is what makes
+the watermark-time plan identical to the plan an arrival-time scan would
+have produced — the streamed == batch equivalence ``tests/test_streaming``
+pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.controlplane.controller import (FleetController, FleetReport)
+from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob
+
+
+@dataclasses.dataclass
+class _Deferred:
+    """One capacity-parked arrival awaiting promotion."""
+    job: TransferJob
+    seq: int                           # FIFO order (arrival order)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayStats:
+    """What the gateway itself did (the controllers' work is in the
+    :class:`FleetReport`): micro-batch shape, admission latency (the gap
+    between a job's arrival and its JobArrival being scheduled — includes
+    any capacity wait), and backfill activity."""
+    n_jobs: int
+    n_batches: int
+    max_batch: int
+    mean_batch: float
+    admission_p50_s: float
+    admission_p95_s: float
+    admission_max_s: float
+    n_deferred: int
+    n_promotions: int
+    n_backfill_promotions: int         # promotions that bypassed FIFO order
+    n_urgent_promotions: int           # SLA guard overrode the green choice
+
+
+class StreamingGateway:
+    """Online admission in front of a fleet (single controller or shards).
+
+    ``fleet`` — a :class:`FleetController` or :class:`ShardedFleet`.
+    ``window_s`` — micro-batch accumulation window: arrivals within
+    ``window_s`` of the batch's first job are admitted together (0 means
+    one batch per distinct arrival instant).
+    ``max_batch`` — hard cap on a micro-batch (closes the batch early).
+    ``max_inflight`` — fleet-wide admitted-but-uncompleted cap; ``None``
+    disables deferral entirely (pure pass-through admission).
+    ``backfill`` — promote deferred jobs by projected emissions instead of
+    FIFO when capacity frees (SLA-guarded; see :meth:`_select_deferred`).
+    ``urgency_margin`` — a deferred job is *urgent* once its remaining
+    slack is below ``urgency_margin x`` its projected duration.
+    ``backfill_lookahead`` — how many deferred jobs (oldest first) a
+    backfill re-score considers per promotion; bounds the per-completion
+    planning cost to O(lookahead) however deep the burst backlog gets
+    (jobs beyond the window advance into it as promotions drain it).
+    ``planner`` — admission planner override; defaults to the fleet-level
+    planner (``ShardedFleet.planner``) or the controller's own.
+    """
+
+    def __init__(self, fleet, *, window_s: float = 300.0,
+                 max_batch: int = 512,
+                 max_inflight: Optional[int] = None,
+                 backfill: bool = False,
+                 urgency_margin: float = 2.0,
+                 backfill_lookahead: int = 64,
+                 planner: Optional[CarbonPlanner] = None):
+        if window_s < 0:
+            raise ValueError(f"window_s must be >= 0, got {window_s}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1 or None, "
+                             f"got {max_inflight}")
+        if backfill_lookahead < 1:
+            raise ValueError(f"backfill_lookahead must be >= 1, "
+                             f"got {backfill_lookahead}")
+        self.fleet = fleet
+        self.controllers: List[FleetController] = list(
+            getattr(fleet, "controllers", None) or [fleet])
+        self.planner = planner if planner is not None \
+            else getattr(fleet, "planner")
+        self.window_s = window_s
+        self.max_batch = max_batch
+        self.max_inflight = max_inflight
+        self.backfill = backfill
+        self.urgency_margin = urgency_margin
+        self.backfill_lookahead = backfill_lookahead
+        self._inflight: set = set()    # gateway-admitted, not yet complete
+        self._deferred: List[_Deferred] = []
+        self._seq = 0
+        self._latency: List[float] = []
+        self._arrival_t: dict = {}     # uuid -> true arrival time
+        self._batch_sizes: List[int] = []
+        self.n_promotions = 0
+        self.n_backfill_promotions = 0
+        self.n_urgent_promotions = 0
+        self._n_deferred_total = 0
+        if max_inflight is not None:
+            for ctl in self.controllers:
+                ctl.completion_hooks.append(self._on_complete)
+
+    # --- the open loop ------------------------------------------------------
+    def run(self, stream: Iterable[TransferJob],
+            until: Optional[float] = None) -> FleetReport:
+        """Drive the fleet open-loop from an arrival stream and return the
+        merged report. Arrivals past ``until`` are never admitted (same
+        visibility a terminal ``run(until)`` gives ``submit_many``)."""
+        wall0 = time.perf_counter()
+        horizon = float("inf") if until is None else until
+        prev_t = -float("inf")
+
+        def _pull(it: Iterator[TransferJob]) -> Optional[TransferJob]:
+            nonlocal prev_t
+            job = next(it, None)
+            if job is not None and job.submitted_t < prev_t - 1e-9:
+                raise ValueError(
+                    f"arrival stream is not time-ordered: {job.uuid} at "
+                    f"t={job.submitted_t} after t={prev_t}")
+            if job is not None:
+                prev_t = job.submitted_t
+            return job
+
+        it = iter(stream)
+        pending = _pull(it)
+        while pending is not None:
+            if pending.submitted_t > horizon:
+                break
+            t_open = pending.submitted_t
+            batch = [pending]
+            pending = _pull(it)
+            while (pending is not None and len(batch) < self.max_batch
+                   and pending.submitted_t <= t_open + self.window_s
+                   and pending.submitted_t <= horizon):
+                batch.append(pending)
+                pending = _pull(it)
+            # the batch closes on its window timer — or at its last
+            # member's arrival when max_batch filled it early (the gateway
+            # has seen every member by then), and never past the run
+            # horizon (the cut flushes an open batch, exactly the
+            # visibility a terminal run(until) gives submit_many). Members
+            # are admitted AT the close (their micro-batch latency); with
+            # window_s=0 the close is the arrival instant itself and a
+            # streamed run replays a submit_many run exactly.
+            t_close = batch[-1].submitted_t if len(batch) >= self.max_batch \
+                else min(t_open + self.window_s, horizon)
+            # watermark: the clock must sit strictly below the close
+            # before the batch's JobArrivals are pushed — admission can
+            # then never violate the monotone-clock contract. Step
+            # batching clamps at the run horizon, not the watermark
+            # (a cut that fragmented step batches would change the event
+            # stream vs the batch-mode run).
+            self._pump_all(t_close, strict=True, horizon=horizon)
+            self._admit(batch, t_close)
+        # stream exhausted (or horizon cut): drain everything still queued,
+        # re-draining after completion hooks promote deferred jobs
+        def _due(ctl: FleetController) -> bool:
+            t = ctl.events.peek_t()
+            return t is not None and (until is None or t <= until)
+
+        while True:
+            for ctl in self.controllers:
+                ctl.pump(until)
+            if not any(_due(ctl) for ctl in self.controllers):
+                if not self._deferred:
+                    break
+                # capacity can never free again inside the horizon
+                # (nothing due is in flight): over-admit one job rather
+                # than strand the deferred tail, then re-drain
+                now = max(ctl.events.now for ctl in self.controllers)
+                self._promote(now, force=True)
+        reports = [ctl.run(until) for ctl in self.controllers]
+        return FleetReport.merged(reports,
+                                  wall_s=time.perf_counter() - wall0)
+
+    def _pump_all(self, t: float, *, strict: bool,
+                  horizon: Optional[float] = None) -> None:
+        for ctl in self.controllers:
+            ctl.pump(t, strict=strict, horizon=horizon)
+
+    # --- admission ----------------------------------------------------------
+    def _admit(self, batch: Sequence[TransferJob], t_close: float) -> None:
+        """Admit one micro-batch at its close instant: ONE plan_batch call
+        for the whole batch, then per-job capacity gating — over-capacity
+        jobs join the deferred set (their plan is recomputed against the
+        conditions at promotion time, so the admission plan is dropped)."""
+        self._batch_sizes.append(len(batch))
+        plans = self.planner.plan_batch(list(batch))
+        for job, plan in zip(batch, plans):
+            self._arrival_t[job.uuid] = job.submitted_t
+            if (self.max_inflight is not None
+                    and len(self._inflight) >= self.max_inflight):
+                self._deferred.append(_Deferred(job=job, seq=self._seq))
+                self._seq += 1
+                self._n_deferred_total += 1
+            else:
+                self._submit(job, plan, at=t_close)
+
+    def _submit(self, job: TransferJob, plan: Optional[Plan],
+                at: float) -> None:
+        self._latency.append(max(0.0, at - self._arrival_t[job.uuid]))
+        if self.max_inflight is not None:
+            self._inflight.add(job.uuid)
+        self.fleet.submit(job, plan=plan, at=at)
+
+    # --- deferral / backfill ------------------------------------------------
+    def _on_complete(self, t: float, job: TransferJob) -> None:
+        """Completion hook (fires inside a controller's JobComplete
+        handler, in event-time order): free the capacity slot and promote
+        deferred work into it."""
+        if job.uuid not in self._inflight:
+            return                     # not gateway-admitted; not ours
+        self._inflight.discard(job.uuid)
+        self._promote(t)
+
+    def _rebased(self, d: _Deferred, now: float) -> TransferJob:
+        """The deferred job as the planner should see it *now*: submission
+        rebased to the promotion instant with the remaining slack (the
+        absolute deadline never extends — same arithmetic as
+        ``CarbonAwareQueue.replan_pending``)."""
+        job = d.job
+        return dataclasses.replace(
+            job, submitted_t=now,
+            sla=dataclasses.replace(
+                job.sla,
+                deadline_s=max(job.submitted_t + job.sla.deadline_s - now,
+                               1.0)))
+
+    def _promote(self, now: float, *, force: bool = False) -> None:
+        """Fill free capacity from the deferred set. FIFO unless
+        ``backfill``; ``force`` lets exactly one job through a full
+        capacity gate (the terminal drain's stall-breaker)."""
+        while self._deferred:
+            if self.max_inflight is not None \
+                    and len(self._inflight) >= self.max_inflight:
+                if not force:
+                    return
+                force = False          # over-admit one, then gate again
+            idx, plan, urgent = self._select_deferred(now)
+            d = self._deferred.pop(idx)
+            fifo_head = all(d.seq <= o.seq for o in self._deferred) \
+                if self._deferred else True
+            self.n_promotions += 1
+            if urgent:
+                self.n_urgent_promotions += 1
+            elif self.backfill and not fifo_head:
+                self.n_backfill_promotions += 1
+            # the ORIGINAL job is submitted (its absolute deadline is what
+            # the controller's SLA accounting reads); the plan carries the
+            # rebased start decision
+            self._submit(d.job, plan, at=now)
+
+    def _select_deferred(self, now: float) -> Tuple[int, Plan, bool]:
+        """Pick the next deferred job to promote. Returns
+        ``(index, rebased plan, urgent?)``.
+
+        FIFO mode re-plans only the head (capacity order is arrival
+        order). Backfill mode re-scores the ``backfill_lookahead`` oldest
+        deferred jobs in one batched plan over submission-rebased copies
+        (bounded per-completion cost — deeper backlog advances into the
+        window as it drains), then:
+
+        * **SLA guard first** — any job whose remaining slack is below
+          ``urgency_margin x`` its projected duration (or whose rebased
+          plan has gone infeasible) is promoted earliest-deadline-first,
+          whatever its emissions;
+        * otherwise the projected-greenest candidate is promoted —
+          counted as a *backfill* promotion when it jumps the FIFO order.
+
+        Subclasses override this to change the admission policy (see
+        docs/extending.md).
+        """
+        if not self.backfill:
+            idx = min(range(len(self._deferred)),
+                      key=lambda i: self._deferred[i].seq)
+            plan = self.planner.plan_batch(
+                [self._rebased(self._deferred[idx], now)])[0]
+            return idx, plan, False
+        # the deferred list stays in seq (arrival) order: promotions pop
+        # from the middle but never reorder, so the lookahead window is a
+        # plain prefix
+        window = self._deferred[:self.backfill_lookahead]
+        rebased = [self._rebased(d, now) for d in window]
+        plans = self.planner.plan_batch(rebased)
+        urgent: List[Tuple[float, int]] = []   # (absolute deadline, idx)
+        for i, (d, rb, plan) in enumerate(zip(window, rebased, plans)):
+            slack = rb.sla.deadline_s
+            if (not plan.feasible
+                    or slack < self.urgency_margin
+                    * plan.predicted_duration_s):
+                urgent.append((d.job.submitted_t + d.job.sla.deadline_s, i))
+        if urgent:
+            _, idx = min(urgent)
+            return idx, plans[idx], True
+        idx = min(range(len(plans)),
+                  key=lambda i: (plans[i].predicted_emissions_g,
+                                 window[i].seq))
+        return idx, plans[idx], False
+
+    # --- reporting ----------------------------------------------------------
+    def stats(self) -> GatewayStats:
+        lat = np.asarray(self._latency) if self._latency else np.zeros(1)
+        sizes = self._batch_sizes or [0]
+        return GatewayStats(
+            n_jobs=len(self._arrival_t),
+            n_batches=len(self._batch_sizes),
+            max_batch=max(sizes),
+            mean_batch=float(np.mean(sizes)),
+            admission_p50_s=float(np.percentile(lat, 50)),
+            admission_p95_s=float(np.percentile(lat, 95)),
+            admission_max_s=float(lat.max()),
+            n_deferred=self._n_deferred_total,
+            n_promotions=self.n_promotions,
+            n_backfill_promotions=self.n_backfill_promotions,
+            n_urgent_promotions=self.n_urgent_promotions)

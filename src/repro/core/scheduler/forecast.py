@@ -24,6 +24,22 @@ class PersistenceForecaster:
     def predict(self, t: float) -> float:
         ts = np.asarray(self.history_t)
         target = t
+        if target > ts[-1]:
+            # fold back by whole periods in one step (the equivalent loop
+            # was O(t/period) for far-future queries): the smallest k with
+            # t - k*period <= ts[-1] — an exact multiple lands ON ts[-1],
+            # matching the loop's strict `>` condition
+            target -= self.period_s * math.ceil(
+                (target - ts[-1]) / self.period_s)
+        i = int(np.argmin(np.abs(ts - target)))
+        return float(self.history_ci[i])
+
+    def predict_reference(self, t: float) -> float:
+        """The seed's subtract-until loop, kept as the oracle
+        :meth:`predict`'s modular fold is pinned to
+        (``tests/test_scheduler.py``)."""
+        ts = np.asarray(self.history_t)
+        target = t
         while target > ts[-1]:
             target -= self.period_s
         i = int(np.argmin(np.abs(ts - target)))

@@ -44,12 +44,19 @@ class CarbonAwareQueue:
         self._push(job, plan)
         return plan
 
-    def submit_many(self, jobs: List[TransferJob]) -> List[Plan]:
+    def submit_many(self, jobs: List[TransferJob],
+                    plans: Optional[List[Plan]] = None) -> List[Plan]:
         """Fleet admission: all grids scored in one ``plan_batch`` call
         (one jitted sweep on the jax batch backend; shared CarbonField
         caches on numpy); one enqueue path (submit) keeps the ordering
-        logic single."""
-        plans = self.planner.plan_batch(jobs)
+        logic single. ``plans`` optionally carries precomputed plans
+        positionally (parity with ``submit(job, plan)`` — a streaming
+        gateway's batched micro-batch plans are not recomputed here)."""
+        if plans is None:
+            plans = self.planner.plan_batch(jobs)
+        elif len(plans) != len(jobs):
+            raise ValueError(f"plans ({len(plans)}) must match jobs "
+                             f"({len(jobs)})")
         return [self.submit(job, plan) for job, plan in zip(jobs, plans)]
 
     def claim(self, ev: JobReady) -> None:

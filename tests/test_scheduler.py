@@ -160,6 +160,32 @@ def test_queue_replan_incremental_keeps_unmoved_plans():
     assert len(q) == 3
 
 
+def test_queue_submit_many_accepts_precomputed_plans():
+    """Parity with submit(job, plan): a gateway's micro-batched plans are
+    enqueued as-is, never recomputed — the planner must not be consulted
+    at all on that path."""
+    pl = CarbonPlanner(FTNS)
+    jobs = [TransferJob(f"p{i}", 150e9, ("uc",), "tacc",
+                        SLA(deadline_s=20 * 3600.0), T0) for i in range(3)]
+    plans = pl.plan_batch(jobs)
+
+    class _NoPlan(CarbonPlanner):
+        def plan(self, job):
+            raise AssertionError("submit_many recomputed a provided plan")
+
+        def plan_batch(self, jobs, previous=None, drift_tol=None):
+            raise AssertionError("submit_many recomputed provided plans")
+
+    q = CarbonAwareQueue(_NoPlan(FTNS))
+    out = q.submit_many(jobs, plans=plans)
+    assert out == plans                 # the same objects, untouched
+    assert len(q) == 3
+    due = q.due(now=plans[0].start_t + 48 * 3600.0)
+    assert {j.uuid for j, _ in due} == {j.uuid for j in jobs}
+    with pytest.raises(ValueError):
+        CarbonAwareQueue(pl).submit_many(jobs, plans=plans[:2])
+
+
 def test_overlay_maybe_migrate_honors_measured_ci_fn():
     """The control plane ranks alternatives under *measured* (drifted) CI:
     a ci_fn that marks every path dirty except via m1 must steer the
@@ -184,3 +210,24 @@ def test_forecasters_track_diurnal_structure():
             v = f.predict(T0 + hh * 3600.0)
             assert min(hist) - 50 <= v <= max(hist) + 50
     assert h.rmse() < (max(hist) - min(hist)) / 2
+
+
+def test_persistence_modular_fold_matches_loop_oracle():
+    """The O(1) modular fold must agree with the seed's subtract-until
+    loop everywhere the loop is affordable — including the exact-multiple
+    edge (a query exactly k periods past the last sample lands ON it, not
+    one period earlier) — and stay O(1)-consistent arbitrarily far out."""
+    hist_t = [T0 + h * 3600.0 for h in range(48)]
+    hist = [float(h % 24) * 10.0 + 100.0 for h in range(48)]
+    pe = PersistenceForecaster(hist_t, hist)
+    probes = [T0 - 3600.0, T0, hist_t[-1], hist_t[-1] + 0.25,
+              hist_t[-1] + pe.period_s,          # exact-multiple edge
+              hist_t[-1] + 3.0 * pe.period_s,
+              T0 + 17 * 86400.0 + 12345.0]
+    probes += [T0 + off * 3600.0 for off in range(0, 30 * 24, 7)]
+    for t in probes:
+        assert pe.predict(t) == pe.predict_reference(t), t
+    # far future (the loop would take ~1e7 iterations here): the fold is
+    # periodic by construction
+    far = T0 + 1e7 * pe.period_s + 5 * 3600.0
+    assert pe.predict(far) == pe.predict(T0 + 86400.0 + 5 * 3600.0)
