@@ -26,9 +26,11 @@ def _registry():
         ("kernel_ssd_vs_ref", P.kernel_ssd_vs_ref),
         ("carbon_field", P.carbon_field),
         ("planner_scan", P.planner_scan),
+        ("planner_multi_device", P.planner_multi_device),
         ("fleet_loop", P.fleet_loop),
         ("fleet_sharded", P.fleet_sharded),
         ("fleet_streaming", P.fleet_streaming),
+        ("fleet_matrix", P.fleet_matrix),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

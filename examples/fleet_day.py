@@ -12,9 +12,16 @@ offsets resume on the greener FTN; nothing is re-transferred). The merged
 report's ledger audit must still re-integrate the per-shard step
 accounting exactly.
 
+Act two runs the *same* day again with ``parallel="auto"`` — one worker
+process per shard over a frozen snapshot of the carbon field — and
+asserts the merged report is bit-identical to the sequential oracle:
+same totals, same event counts, same outcome rows. Process parallelism
+buys wall time, never a different answer.
+
     PYTHONPATH=src python examples/fleet_day.py
 """
 import hashlib
+import time
 
 from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
 from repro.core.controlplane import ShardedFleet
@@ -60,15 +67,27 @@ def make_jobs():
     return jobs
 
 
-def main():
+def run_day(parallel: str = "off"):
+    """One full simulated day through the fleet; shard_backend is pinned
+    to the numpy oracle so the sequential and worker-per-shard runs are
+    comparable bit for bit (fork workers must stay off XLA anyway)."""
     fleet = ShardedFleet(FTNS, n_shards=N_SHARDS,
                          migration_threshold=250.0,
                          replan_every_s=3600.0,
-                         migrate_check_every_s=900.0)
+                         migrate_check_every_s=900.0,
+                         parallel=parallel, shard_backend="numpy")
     fleet.submit_many(make_jobs())
     fleet.inject_shock(T0 + 11 * 3600.0, 6.0, duration_s=6 * 3600.0,
                        zones=SHOCK_ZONES)
+    t0 = time.perf_counter()
     report = fleet.run()
+    drain_wall = time.perf_counter() - t0
+    fleet.close()
+    return fleet, report, drain_wall
+
+
+def main():
+    fleet, report, seq_wall = run_day()
 
     print(report.summary())
     sizes = [r.n_jobs for r in fleet.shard_reports]
@@ -98,6 +117,22 @@ def main():
     assert audit_rel < 1e-9, f"merged ledger audit off by {audit_rel:.2e}"
     print(f"\nOK: {report.n_completed} jobs closed-loop across "
           f"{N_SHARDS} shards, merged ledger audit within {audit_rel:.1e}")
+
+    # --- act two: the same day, one worker process per shard ---------------
+    pfleet, preport, par_wall = run_day(parallel="auto")
+    pwalls = [round(r.wall_s, 2) for r in pfleet.shard_reports]
+    print(f"\nparallel ({pfleet.parallel}): {N_SHARDS} workers drained the "
+          f"same day in {par_wall:.2f} s coordinator wall (sequential "
+          f"{seq_wall:.2f} s; worker shard walls {pwalls} s)")
+    assert preport.total_actual_g == report.total_actual_g
+    assert preport.ledger_total_g == report.ledger_total_g
+    assert preport.total_planned_g == report.total_planned_g
+    assert (preport.n_events, preport.n_steps, preport.migrations) == \
+        (report.n_events, report.n_steps, report.migrations)
+    assert preport.outcomes == report.outcomes
+    print(f"OK: worker-per-shard merge is bit-identical to the sequential "
+          f"oracle ({preport.n_completed} jobs, "
+          f"{preport.total_actual_g / 1000:.1f} kg)")
 
 
 if __name__ == "__main__":

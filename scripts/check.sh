@@ -2,10 +2,14 @@
 # Tier-1 verify entrypoint (see ROADMAP.md): run from the repo root or any
 # subdirectory; mirrors exactly what CI runs. The docs gate (intra-repo
 # markdown links + docs/ snippet execution) always runs; set CHECK_BENCH=1
-# to follow the tests with the bench smoke (planner grid scan + fleet
-# control loop + sharded scale-out sweep + streaming gateway, which gates
-# a sustained-throughput floor of 0.8x the co-measured sharded run),
-# refreshing BENCH_planner.json / BENCH_fleet.json, and with the
+# to follow the tests with the bench smoke (planner grid scan + forced
+# multi-device shard_map sweep + fleet control loop + sharded scale-out
+# sweep incl. the process-parallel worker-per-shard runner, which gates
+# an exact-merge match always and a >= 2x throughput floor on hosts with
+# >= 4 CPUs — below that the numbers are recorded and the floor is
+# skipped — + streaming gateway, which gates a sustained-throughput floor
+# of 0.8x the co-measured sharded run, + the scenario x policy x window
+# matrix), refreshing BENCH_planner.json / BENCH_fleet.json, and with the
 # examples/fleet_stream.py end-to-end scenario run (backfill on, merged
 # ledger audit asserted).
 set -euo pipefail
@@ -16,10 +20,14 @@ if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only planner_scan
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only planner_multi_device
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_loop
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_sharded
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_streaming
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only fleet_matrix
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/fleet_stream.py
 fi

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -110,6 +111,17 @@ class _NoiseTable:
             if 0 <= off < len(vals):
                 return float(vals[off])
         return float(self.lookup(key, np.asarray([idx]))[0])
+
+    def snapshot(self) -> Tuple[Tuple[str, int, np.ndarray], ...]:
+        """The cached ranges as an immutable (key, h0, vals) tuple — the
+        arrays are never mutated in place (extension rebinds), so sharing
+        them with a snapshot is safe."""
+        return tuple((k, self._h0[k], self._vals[k]) for k in self._h0)
+
+    def restore(self, snap: Sequence[Tuple[str, int, np.ndarray]]) -> None:
+        for key, h0, vals in snap:
+            self._h0[key] = int(h0)
+            self._vals[key] = np.asarray(vals)
 
 
 class CarbonField:
@@ -415,16 +427,99 @@ class CarbonField:
         self._weight_fn_cache[key] = w_of
         return w_of
 
+    def freeze(self, *, include_grids: bool = True) -> "FrozenField":
+        """A pickle-cheap, read-only snapshot of this field's warmed state:
+        the hashed noise ranges, per-device bands and (optionally) the
+        prefix-sum hop-CI grids, all materialized once. A worker process
+        thaws it into a field whose every query is bit-identical to this
+        one's — without re-hashing a single (key, hour) — which is what
+        lets ``ParallelShardRunner`` ship one snapshot per spawn worker
+        (or share it copy-on-write under fork) instead of re-warming
+        per-process caches. The snapshot aliases the live arrays (they are
+        never mutated in place; cache extension rebinds), so freezing is
+        O(cached keys), not O(bytes)."""
+        grids: Tuple[Tuple[Tuple, np.ndarray], ...] = ()
+        if include_grids:
+            grids = tuple(self._hop_grid_cache.items())
+        return FrozenField(
+            calibrated=self.calibrated,
+            zone_noise=self._zone_noise.snapshot(),
+            hop_noise=self._hop_noise.snapshot(),
+            hop_base=tuple(self._hop_base.items()),
+            grids=grids)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenField:
+    """What :meth:`CarbonField.freeze` returns: immutable, picklable, and
+    cheap to thaw. ``zone_noise``/``hop_noise`` are the dense hashed
+    ranges ((key, h0, vals) per key), ``hop_base`` the per-IP sub-metering
+    bands, ``grids`` the prefix-sum hop-CI grid cache (keyed by hashable
+    path identity, so a thawed field's grid lookups hit by value)."""
+    calibrated: bool
+    zone_noise: Tuple[Tuple[str, int, np.ndarray], ...]
+    hop_noise: Tuple[Tuple[str, int, np.ndarray], ...]
+    hop_base: Tuple[Tuple[str, float], ...]
+    grids: Tuple[Tuple[Tuple, np.ndarray], ...] = ()
+
+    def thaw(self) -> CarbonField:
+        """Rebuild a warm :class:`CarbonField` from the snapshot."""
+        f = CarbonField(calibrated=self.calibrated)
+        f._zone_noise.restore(self.zone_noise)
+        f._hop_noise.restore(self.hop_noise)
+        f._hop_base = dict(self.hop_base)
+        for key, arr in self.grids:    # freeze() is bounded by the cap
+            f._hop_grid_cache[key] = arr
+        return f
+
+    @property
+    def nbytes(self) -> int:
+        """Payload size (the spawn-worker shipping cost)."""
+        return (sum(v.nbytes for _, _, v in self.zone_noise)
+                + sum(v.nbytes for _, _, v in self.hop_noise)
+                + sum(a.nbytes for _, a in self.grids))
+
 
 _DEFAULT: Optional[CarbonField] = None
+_DEFAULT_PID: Optional[int] = None
+_DEFAULT_FROZEN: Optional[FrozenField] = None
+
+
+def install_frozen_default(frozen: FrozenField) -> CarbonField:
+    """Make ``frozen`` the source of this process's default field: thaw it
+    now and remember it, so a later process boundary (a fork of *this*
+    process) rebuilds from the same snapshot. Worker entrypoints call this
+    before touching any scheduler code — it is what guarantees a worker's
+    ``default_field()`` is warm and value-identical to the coordinator's
+    instead of a silently re-hashed divergent copy."""
+    global _DEFAULT, _DEFAULT_PID, _DEFAULT_FROZEN
+    _DEFAULT_FROZEN = frozen
+    _DEFAULT = frozen.thaw()
+    _DEFAULT_PID = os.getpid()
+    return _DEFAULT
 
 
 def default_field() -> CarbonField:
     """The process-wide shared field (one noise/trace cache for planner,
-    queue, time/space/overlay shifting and telemetry)."""
-    global _DEFAULT
+    queue, time/space/overlay shifting and telemetry).
+
+    Fork/spawn safety: the cache is stamped with the pid that built it. A
+    worker that inherited module state across a process boundary (fork)
+    must not keep treating the coordinator's mutable cache as its own —
+    if a frozen snapshot was registered (:func:`install_frozen_default`),
+    the worker rebuilds from it; otherwise the inherited copy-on-write
+    state is adopted as this process's private cache. A spawn worker
+    starts with a clean module, so it gets a warm field only via
+    ``install_frozen_default`` — which is exactly what
+    ``ParallelShardRunner`` does in its worker entrypoint."""
+    global _DEFAULT, _DEFAULT_PID
+    if _DEFAULT is not None and _DEFAULT_PID != os.getpid():
+        _DEFAULT = _DEFAULT_FROZEN.thaw() \
+            if _DEFAULT_FROZEN is not None else _DEFAULT
+        _DEFAULT_PID = os.getpid()
     if _DEFAULT is None:
         _DEFAULT = CarbonField()
+        _DEFAULT_PID = os.getpid()
     return _DEFAULT
 
 

@@ -24,6 +24,9 @@ def __getattr__(name):
     if name in ("StreamingGateway", "GatewayStats"):
         from repro.core.controlplane import streaming
         return getattr(streaming, name)
+    if name in ("ParallelShardRunner", "ShardProxy", "ShardSpec"):
+        from repro.core.controlplane import parallel
+        return getattr(parallel, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
@@ -31,4 +34,5 @@ __all__ = [
     "MigrationCheck", "ForecastShock", "JobComplete",
     "FleetController", "FleetReport", "JobOutcome", "ShardedFleet",
     "StreamingGateway", "GatewayStats",
+    "ParallelShardRunner", "ShardProxy", "ShardSpec",
 ]

@@ -45,7 +45,13 @@ Layer contract:
   partitions jobs across independent controllers over one shared
   :class:`CarbonField` and merges their reports
   (:meth:`FleetReport.merged` — totals and the ledger audit are sums, so
-  merging is exact and associative);
+  merging is exact and associative). The same independence is what lets
+  ``core.controlplane.parallel`` run each controller to completion in
+  its own worker process over a frozen field snapshot: a controller
+  never reads another's state, so a worker-per-shard run is
+  bit-identical to the sequential drain, and the resumable
+  :meth:`pump` doubles as the per-quantum barrier a parallel streaming
+  driver pumps workers with;
 * throughput learning is attributed to the leg that *bound* the rate —
   (source, relay) when leg 1 bound, (relay, dst) when leg 2 did, nothing
   when an FTN NIC cap clamped the stream (the achieved rate then says

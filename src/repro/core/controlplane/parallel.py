@@ -1,0 +1,438 @@
+"""Process-parallel shard execution: one worker process per shard.
+
+``ShardedFleet`` drains its shards sequentially in-process — deterministic,
+but `BENCH_fleet.json` shows the 4-shard sweep busy for only
+``max_shard_wall_s`` of a much longer wall, so most of the measured
+parallel headroom is idle coordinator time. Shards are *fully independent*
+controllers, which makes them exactly the unit a worker process should
+own: :class:`ParallelShardRunner` starts one persistent worker per shard,
+rebuilds that shard's :class:`FleetController` inside it, and drives it
+over a pipelined pipe protocol. The coordinator keeps the fleet-level
+batched admission (the one-jit ``plan_batch`` sweep) and ships each shard
+its (job, plan) stream; workers run the event loops concurrently and ship
+:class:`FleetReport`\\ s back, merged by the exact-sum
+``FleetReport.merged`` contract — totals bit-identical to the sequential
+run of the same seeds on the same shard planner backend.
+
+Design contracts:
+
+* **frozen field, not shared field** — every worker thaws the same
+  :class:`~repro.core.carbon.field.FrozenField` snapshot
+  (``CarbonField.freeze()``), taken from the coordinator's warmed field at
+  worker start. All noise is hashed once in the coordinator; workers never
+  re-hash, and every CI query is bit-identical across processes because
+  the traces are deterministic functions of the snapshot.
+* **fork workers stay off jax** — XLA's runtime threads do not survive
+  ``os.fork()`` (a forked child calling a jitted kernel deadlocks), so
+  fork-mode workers run their shard planners on the pinned *numpy oracle*
+  backend. The expensive fleet-wide admission sweep already runs in the
+  coordinator, where jax is safe; in-run re-plan sweeps are small.
+  Spawn-mode workers own a fresh interpreter and may use any backend.
+* **per-quantum barrier** — :meth:`ParallelShardRunner.pump_all` sends one
+  bounded ``pump(until, strict, horizon)`` to every worker, then drains
+  replies in shard order: a barrier per time quantum. The
+  ``StreamingGateway`` watermark pump uses it verbatim, so online
+  admission drives all workers concurrently while each shard's monotone
+  clock (and the watermark rule built on it) is untouched — the quantum
+  boundary *is* the watermark.
+* **completions cross the boundary as data** — workers buffer
+  ``JobComplete`` notifications and ship them with each reply; the
+  coordinator-side :class:`ShardProxy` re-fires them through its own
+  ``completion_hooks`` in shard-major order (the same order the
+  sequential driver fires them). Capacity/backfill gateways therefore
+  work unchanged, with promotions landing at quantum granularity.
+
+The sequential runner stays the pinned oracle: ``ShardedFleet`` defaults
+to ``parallel="off"``, and ``tests/test_parallel.py`` pins the parallel
+merge bit-identical to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import traceback
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.carbon.field import FrozenField, install_frozen_default
+from repro.core.controlplane.controller import FleetReport
+
+#: shard-planner backend forced on fork workers (see module docstring).
+FORK_SAFE_BACKEND = "numpy"
+
+
+def resolve_mode(parallel: str) -> str:
+    """Map a ``parallel=`` knob value to a start method: ``"auto"`` picks
+    fork where the platform offers it (cheapest start, copy-on-write
+    snapshot sharing), spawn otherwise."""
+    if parallel == "auto":
+        return "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+    return parallel
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Everything a worker needs to rebuild one shard controller. Must be
+    picklable (spawn ships it; fork inherits it copy-on-write)."""
+    ftns: Tuple
+    controller_kw: Tuple[Tuple[str, Any], ...]
+    batch_backend: str
+    frozen: Optional[FrozenField]
+
+
+def _worker_main(conn, spec: ShardSpec) -> None:
+    """Worker entrypoint: rebuild the shard controller over the thawed
+    snapshot, then serve commands until EOF/stop. Every command gets
+    exactly one reply — ``("ok", (now, peek_t), completions, extra)`` or
+    ``("err", traceback_str, (), None)`` — so the coordinator can
+    pipeline sends and drain acknowledgements lazily, and no completion
+    notification is ever lost between quanta."""
+    from repro.core.controlplane.controller import FleetController
+    from repro.core.scheduler.planner import CarbonPlanner
+
+    try:
+        if spec.frozen is not None:
+            field = install_frozen_default(spec.frozen)
+        else:
+            from repro.core.carbon.field import default_field
+            field = default_field()
+        ftns = list(spec.ftns)
+        planner = CarbonPlanner(ftns, field=field,
+                                batch_backend=spec.batch_backend)
+        ctl = FleetController(ftns, field=field, planner=planner,
+                              **dict(spec.controller_kw))
+        completions: List[Tuple[float, str]] = []
+        ctl.completion_hooks.append(
+            lambda t, job: completions.append((t, job.uuid)))
+    except Exception:  # noqa: BLE001 — ship the construction failure
+        conn.send(("err", traceback.format_exc(), (), None))
+        conn.close()
+        return
+
+    running = True
+    while running:
+        try:
+            cmd, args = conn.recv()
+        except (EOFError, OSError):
+            break
+        try:
+            extra: Any = None
+            if cmd == "submit":
+                job, plan, at = args
+                ctl.submit(job, plan=plan, at=at)
+            elif cmd == "submit_many":
+                for job, plan, at in args:
+                    ctl.submit(job, plan=plan, at=at)
+            elif cmd == "shock":
+                t, factor, duration_s, zones = args
+                ctl.inject_shock(t, factor, duration_s=duration_s,
+                                 zones=zones)
+            elif cmd == "pump":
+                until, strict, horizon = args
+                extra = ctl.pump(until, strict=strict, horizon=horizon)
+            elif cmd == "run":
+                extra = ctl.run(args)
+            elif cmd == "state":
+                pass
+            elif cmd == "stop":
+                running = False
+            else:
+                raise ValueError(f"unknown worker command {cmd!r}")
+            done, completions[:] = tuple(completions), []
+            conn.send(("ok", (ctl.events.now, ctl.events.peek_t()),
+                       done, extra))
+        except Exception:  # noqa: BLE001 — report, keep serving
+            conn.send(("err", traceback.format_exc(), (), None))
+    conn.close()
+
+
+class _ClockView:
+    """Coordinator-side mirror of a worker's ``EventLoop`` clock: ``now``
+    and ``peek_t()`` as of the last reply, plus exact optimistic updates
+    for pipelined submits (the worker clock never advances between
+    commands, so ``max(t, now)`` here equals the push the worker will
+    do)."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._peek: Optional[float] = None
+
+    def peek_t(self) -> Optional[float]:
+        return self._peek
+
+    def _sync(self, now: float, peek: Optional[float]) -> None:
+        self.now = now
+        self._peek = peek
+
+    def _push_hint(self, t: float) -> None:
+        t = max(t, self.now)
+        self._peek = t if self._peek is None else min(self._peek, t)
+
+
+class _WorkerHandle:
+    """One worker process + its pipe, with lazy reply draining: ``send``
+    pipelines a command, ``drain`` collects every outstanding reply in
+    order (raising on the first error), ``call`` is send-then-drain."""
+
+    def __init__(self, ctx, spec: ShardSpec, name: str,
+                 on_reply: Callable[[Tuple, Any], None]):
+        self.name = name
+        self.conn, child = ctx.Pipe()
+        self.proc = ctx.Process(target=_worker_main, args=(child, spec),
+                                name=name, daemon=True)
+        with warnings.catch_warnings():
+            # jax warns that a multithreaded parent is forking; our fork
+            # workers never call back into XLA (FORK_SAFE_BACKEND), which
+            # is the precise hazard the warning is about
+            warnings.simplefilter("ignore", RuntimeWarning)
+            self.proc.start()
+        child.close()
+        self.outstanding = 0
+        self._on_reply = on_reply
+
+    # pipelining cap: past this many unread acknowledgements the reply
+    # pipe could fill and stall the worker's reply send — which would
+    # stop it reading commands and deadlock both ends. Draining early
+    # keeps both buffers bounded.
+    _MAX_OUTSTANDING = 256
+
+    def send(self, cmd: str, args: Any = None) -> None:
+        if self.outstanding >= self._MAX_OUTSTANDING:
+            self.drain()
+        try:
+            self.conn.send((cmd, args))
+        except (BrokenPipeError, OSError):
+            # the worker died: surface whatever it managed to report —
+            # usually its unsolicited construction-failure traceback —
+            # instead of a bare broken pipe
+            self._surface_worker_error()
+            raise
+        self.outstanding += 1
+
+    def _surface_worker_error(self) -> None:
+        """Read any replies already in the pipe (solicited or the
+        worker's unsolicited construction-failure report, which arrives
+        with nothing outstanding) and raise the shipped traceback if one
+        is found."""
+        try:
+            while self.conn.poll(0.2):
+                kind, state, done, _ = self.conn.recv()
+                if self.outstanding:
+                    self.outstanding -= 1
+                if kind == "err":
+                    raise RuntimeError(f"{self.name} failed:\n{state}")
+                self._on_reply(state, done)
+        except (EOFError, OSError):
+            pass
+
+    def drain(self) -> Any:
+        """Collect all outstanding replies in order; return the last
+        reply's extra payload."""
+        extra = None
+        while self.outstanding:
+            kind, state, done, extra = self.conn.recv()
+            self.outstanding -= 1
+            if kind == "err":
+                raise RuntimeError(
+                    f"{self.name} failed:\n{state}")
+            self._on_reply(state, done)
+        return extra
+
+    def call(self, cmd: str, args: Any = None) -> Any:
+        self.send(cmd, args)
+        return self.drain()
+
+    def close(self, timeout: float = 5.0) -> None:
+        try:
+            if self.proc.is_alive():
+                self.send("stop")
+                # drain every acknowledgement (including stop's) before
+                # closing our end: the worker must never find a broken
+                # pipe under a reply it still owes
+                try:
+                    self.drain()
+                except (RuntimeError, EOFError, OSError):
+                    pass
+            self.conn.close()
+        except (OSError, ValueError):
+            pass
+        self.proc.join(timeout)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout)
+
+
+class ShardProxy:
+    """Coordinator-side stand-in for one shard's remote controller.
+
+    Mimics exactly the slice of the :class:`FleetController` API the fleet
+    drivers use — ``submit`` / ``submit_many`` / ``inject_shock`` /
+    ``pump`` / ``run``, an ``events`` clock view, and
+    ``completion_hooks`` — so ``ShardedFleet`` routing and the
+    ``StreamingGateway`` watermark pump drive a worker without knowing it
+    is one. Completion notifications shipped by the worker re-fire through
+    ``completion_hooks`` with the original :class:`TransferJob` (every
+    submission passes through this proxy, so the job objects are at
+    hand)."""
+
+    def __init__(self, runner: "ParallelShardRunner", idx: int):
+        self._runner = runner
+        self._idx = idx
+        self.events = _ClockView()
+        self.completion_hooks: List[Callable] = []
+        self._jobs: Dict[str, Any] = {}
+        self._pending: List[Tuple[float, str]] = []
+
+    # --- wire plumbing ------------------------------------------------------
+    @property
+    def _handle(self) -> _WorkerHandle:
+        return self._runner._handle(self._idx)
+
+    def _on_reply(self, state: Tuple,
+                  done: Tuple[Tuple[float, str], ...]) -> None:
+        self.events._sync(*state)
+        self._pending.extend(done)
+
+    def _fire_completions(self) -> None:
+        pending, self._pending = self._pending, []
+        for t, uuid in pending:
+            job = self._jobs.pop(uuid, None)
+            for hook in self.completion_hooks:
+                hook(t, job)
+
+    # --- the controller API slice ------------------------------------------
+    def submit(self, job, plan=None, at=None) -> None:
+        self._jobs[job.uuid] = job
+        h = self._handle
+        h.send("submit", (job, plan, at))
+        t = job.submitted_t if at is None else max(at, job.submitted_t)
+        self.events._push_hint(t)
+
+    def submit_many(self, jobs: Sequence, plans: Optional[Sequence] = None
+                    ) -> None:
+        """Batched submission: ONE wire message however many jobs — the
+        per-message pickle/syscall cost is what would otherwise dominate
+        a large fleet's admission."""
+        if plans is not None and len(plans) != len(jobs):
+            raise ValueError(f"plans ({len(plans)}) must match jobs "
+                             f"({len(jobs)})")
+        if not jobs:
+            return
+        batch = []
+        for i, job in enumerate(jobs):
+            self._jobs[job.uuid] = job
+            batch.append((job, plans[i] if plans is not None else None,
+                          None))
+            self.events._push_hint(job.submitted_t)
+        self._handle.send("submit_many", batch)
+
+    def inject_shock(self, t: float, factor: float, *,
+                     duration_s: float = float("inf"),
+                     zones: Optional[Sequence[str]] = None) -> None:
+        self._handle.send(
+            "shock", (t, factor, duration_s,
+                      tuple(zones) if zones is not None else None))
+
+    def pump(self, until: Optional[float] = None, *, strict: bool = False,
+             horizon: Optional[float] = None) -> int:
+        n = self._handle.call("pump", (until, strict, horizon))
+        self._fire_completions()
+        return n
+
+    def run(self, until: Optional[float] = None) -> FleetReport:
+        report = self._handle.call("run", until)
+        self._fire_completions()
+        return report
+
+
+class ParallelShardRunner:
+    """N persistent worker processes, one shard controller each.
+
+    Workers start lazily at the first command, so the
+    ``spec_factory`` — which freezes the coordinator field — runs *after*
+    whatever warmed it (typically the fleet-level admission planning).
+    ``pump_all``/``run_all`` are the barriers: one command to every
+    worker, then replies drained in shard order (reports merge in shard
+    order; completion hooks fire shard-major, matching the sequential
+    driver)."""
+
+    def __init__(self, n_shards: int,
+                 spec_factory: Callable[[], Sequence[ShardSpec]], *,
+                 mode: str = "auto"):
+        mode = resolve_mode(mode)
+        if mode not in mp.get_all_start_methods():
+            raise ValueError(f"start method {mode!r} not available "
+                             f"(have {mp.get_all_start_methods()})")
+        self.mode = mode
+        self._spec_factory = spec_factory
+        self.proxies = [ShardProxy(self, i) for i in range(n_shards)]
+        self._handles: Optional[List[_WorkerHandle]] = None
+        self._closed = False
+
+    @property
+    def started(self) -> bool:
+        return self._handles is not None
+
+    def _handle(self, idx: int) -> _WorkerHandle:
+        if self._closed:
+            raise RuntimeError(
+                "ParallelShardRunner is closed — workers carry the shard "
+                "state, so a closed fleet cannot be driven again; build a "
+                "new ShardedFleet instead")
+        if self._handles is None:
+            specs = list(self._spec_factory())
+            if len(specs) != len(self.proxies):
+                raise ValueError(f"spec_factory returned {len(specs)} "
+                                 f"specs for {len(self.proxies)} shards")
+            ctx = mp.get_context(self.mode)
+            self._handles = [
+                _WorkerHandle(ctx, spec, f"shard-worker-{i} ({self.mode})",
+                              on_reply=self.proxies[i]._on_reply)
+                for i, spec in enumerate(specs)]
+        return self._handles[idx]
+
+    # --- barriers -----------------------------------------------------------
+    def pump_all(self, until: Optional[float] = None, *,
+                 strict: bool = False,
+                 horizon: Optional[float] = None) -> int:
+        """One bounded time quantum across every shard: send the pump to
+        all workers (they advance concurrently), then barrier on the
+        replies in shard order and fire the shipped completion hooks
+        shard-major. The quantum bound is exactly ``FleetController.pump``'s
+        cut, so the monotone-clock contract holds per shard by
+        construction."""
+        for p in self.proxies:
+            p._handle.send("pump", (until, strict, horizon))
+        total = 0
+        for p in self.proxies:
+            total += p._handle.drain()
+        for p in self.proxies:
+            p._fire_completions()
+        return total
+
+    def run_all(self, until: Optional[float] = None) -> List[FleetReport]:
+        """Drain every shard to ``until`` concurrently; reports come back
+        in shard order (the sequential merge order)."""
+        for p in self.proxies:
+            p._handle.send("run", until)
+        reports: List[FleetReport] = [p._handle.drain()
+                                      for p in self.proxies]
+        for p in self.proxies:
+            p._fire_completions()
+        return reports
+
+    def close(self) -> None:
+        """Stop and join every worker (idempotent). The workers carry the
+        shard state, so the runner refuses further commands once
+        closed."""
+        self._closed = True
+        handles, self._handles = self._handles, None
+        if handles:
+            for h in handles:
+                h.close()
+
+    def __del__(self) -> None:  # best-effort; close() is the real API
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001
+            pass

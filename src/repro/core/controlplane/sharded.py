@@ -27,6 +27,13 @@ salted ``hash``):
 * ``"source"`` — by first replica endpoint, so a site's jobs land on one
   shard and its throughput-model corrections stay coherent;
 * any callable ``job -> int``.
+
+Execution is sequential in-process by default (``parallel="off"`` — the
+pinned deterministic oracle); ``parallel="fork" | "spawn" | "auto"``
+swaps the in-process controllers for :class:`ShardProxy` handles onto a
+:class:`ParallelShardRunner` — one worker process per shard over a frozen
+carbon-field snapshot, same API, bit-identical merged totals on the same
+shard planner backend (see ``core.controlplane.parallel``).
 """
 from __future__ import annotations
 
@@ -38,6 +45,9 @@ import numpy as np
 
 from repro.core.carbon.field import CarbonField, default_field
 from repro.core.controlplane.controller import FleetController, FleetReport
+from repro.core.controlplane.parallel import (FORK_SAFE_BACKEND,
+                                              ParallelShardRunner, ShardSpec,
+                                              resolve_mode)
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import CarbonPlanner, TransferJob
 
@@ -50,34 +60,72 @@ def _stable_hash(key: str) -> int:
 class ShardedFleet:
     """N partitioned :class:`FleetController` shards, one merged report.
 
-    ``batch_backend`` is forwarded to every shard planner ("jax" stacks
-    each shard's full-scan planning into one jitted call; None picks jax
-    when available, numpy otherwise). Remaining keyword arguments are
+    ``batch_backend`` is forwarded to the fleet-level admission planner
+    ("jax" stacks the fleet's full-scan planning into one jitted call;
+    None picks jax when available, numpy otherwise). ``shard_backend``
+    is the *shard planners'* batch backend — the in-run re-plan sweeps —
+    and defaults to ``batch_backend``, except under ``parallel="fork"``
+    where it defaults to the numpy oracle (XLA does not survive a fork;
+    see ``core.controlplane.parallel``). Remaining keyword arguments are
     forwarded to every ``FleetController``.
+
+    ``parallel`` selects the shard execution engine: ``"off"`` (default)
+    drains shards sequentially in-process — the pinned oracle — while
+    ``"fork"`` / ``"spawn"`` / ``"auto"`` run one worker process per
+    shard over a frozen snapshot of ``field``, started lazily at the
+    first shard command (so the snapshot captures the admission-warmed
+    caches). A parallel fleet should be :meth:`close`\\ d (or used as a
+    context manager) to reap its workers.
     """
 
     def __init__(self, ftns: Sequence[FTN], *, n_shards: int = 4,
                  field: Optional[CarbonField] = None,
                  partition: Union[str, Callable[[TransferJob], int]] = "hash",
                  batch_backend: Optional[str] = None,
+                 parallel: str = "off",
+                 shard_backend: Optional[str] = None,
                  **controller_kw):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         if not callable(partition) and partition not in ("hash", "source"):
             raise ValueError(f"partition must be 'hash', 'source' or a "
                              f"callable, got {partition!r}")
+        if parallel not in ("off", "fork", "spawn", "auto"):
+            raise ValueError(f"parallel must be 'off', 'fork', 'spawn' or "
+                             f"'auto', got {parallel!r}")
         self.field = field or default_field()
         if batch_backend is None:
             from repro.core.scheduler.grid_jax import HAVE_JAX
             batch_backend = "jax" if HAVE_JAX else "numpy"
+        self.parallel = parallel if parallel == "off" \
+            else resolve_mode(parallel)
+        if shard_backend is None:
+            shard_backend = FORK_SAFE_BACKEND \
+                if self.parallel == "fork" else batch_backend
+        self.shard_backend = shard_backend
         self.partition = partition
-        self.controllers: List[FleetController] = [
-            FleetController(
-                ftns, field=self.field,
-                planner=CarbonPlanner(ftns, field=self.field,
-                                      batch_backend=batch_backend),
-                **controller_kw)
-            for _ in range(n_shards)]
+        self.ftns = list(ftns)
+        self._controller_kw = dict(controller_kw)
+        if self.parallel != "off":
+            clash = {"planner", "engine", "field"} & set(controller_kw)
+            if clash:
+                raise ValueError(
+                    f"parallel workers rebuild their own {sorted(clash)} "
+                    f"from the shard spec; pass planner knobs via "
+                    f"shard_backend / batch_backend instead")
+        self._runner: Optional[ParallelShardRunner] = None
+        if self.parallel == "off":
+            self.controllers = [
+                FleetController(
+                    ftns, field=self.field,
+                    planner=CarbonPlanner(ftns, field=self.field,
+                                          batch_backend=shard_backend),
+                    **controller_kw)
+                for _ in range(n_shards)]
+        else:
+            self._runner = ParallelShardRunner(
+                n_shards, self._shard_specs, mode=self.parallel)
+            self.controllers = self._runner.proxies
         # fleet-level admission planner: scores every submitted job's grid
         # in ONE batched call (base-capacity throughput model — in-run
         # corrections are the shards' re-plan sweeps' job). Shocks
@@ -92,6 +140,18 @@ class ShardedFleet:
     @property
     def n_shards(self) -> int:
         return len(self.controllers)
+
+    def _shard_specs(self) -> List[ShardSpec]:
+        """Worker blueprints, built lazily at worker start: the field is
+        frozen *then*, so whatever warmed it (typically the fleet-level
+        admission ``plan_batch``) ships with the snapshot instead of
+        being re-hashed N times."""
+        spec = ShardSpec(
+            ftns=tuple(self.ftns),
+            controller_kw=tuple(sorted(self._controller_kw.items())),
+            batch_backend=self.shard_backend,
+            frozen=self.field.freeze())
+        return [spec] * len(self.controllers)
 
     def shard_of(self, job: TransferJob) -> int:
         if callable(self.partition):
@@ -110,12 +170,22 @@ class ShardedFleet:
     def submit_many(self, jobs: Sequence[TransferJob]) -> None:
         """Batched admission: the *whole* fleet's (job x FTN x replica x
         slot) grid stack is scored in one fleet-level ``plan_batch`` call
-        (one jitted sweep on the jax batch backend), then each arrival is
-        enqueued on its shard with the plan attached — shards never replan
-        at arrival, only at their drift sweeps."""
+        (one jitted sweep on the jax batch backend), then each shard's
+        arrivals are enqueued as one plan-carrying group — shards never
+        replan at arrival, only at their drift sweeps, and a parallel
+        fleet ships each shard one wire message instead of one per job.
+        Grouping is stable, so per-shard arrival order (and thus the
+        event seq tiebreak) is identical to a per-job submit loop."""
         jobs = list(jobs)
-        for job, plan in zip(jobs, self.planner.plan_batch(jobs)):
-            self.controllers[self.shard_of(job)].submit(job, plan=plan)
+        plans = self.planner.plan_batch(jobs)
+        by_shard: List[tuple] = [([], []) for _ in self.controllers]
+        for job, plan in zip(jobs, plans):
+            js, ps = by_shard[self.shard_of(job)]
+            js.append(job)
+            ps.append(plan)
+        for ctl, (js, ps) in zip(self.controllers, by_shard):
+            if js:
+                ctl.submit_many(js, plans=ps)
 
     def inject_shock(self, t: float, factor: float, *,
                      duration_s: float = float("inf"),
@@ -140,15 +210,51 @@ class ShardedFleet:
                                  scale * f_path, scale)
         return scale
 
-    def run(self, until: Optional[float] = None) -> FleetReport:
-        """Drain every shard and merge. Shards run sequentially in-process
-        (they are fully independent — a deployment may run one per worker;
-        the per-shard :class:`FleetReport` list survives on
-        ``self.shard_reports``), and the merged ``jobs_per_s`` uses the
-        measured coordinator wall."""
-        wall0 = time.perf_counter()
-        reports = [ctl.run(until) for ctl in self.controllers]
-        merged = FleetReport.merged(
-            reports, wall_s=time.perf_counter() - wall0)
+    def pump_all(self, until: Optional[float] = None, *,
+                 strict: bool = False,
+                 horizon: Optional[float] = None) -> int:
+        """One bounded time quantum across every shard (the streaming
+        gateway's watermark pump): sequentially in-process, or as one
+        barriered concurrent quantum over the worker pool. Returns the
+        total events processed."""
+        if self._runner is not None:
+            return self._runner.pump_all(until, strict=strict,
+                                         horizon=horizon)
+        return sum(ctl.pump(until, strict=strict, horizon=horizon)
+                   for ctl in self.controllers)
+
+    def run_shards(self, until: Optional[float] = None) -> List[FleetReport]:
+        """Drain every shard and return the per-shard reports in shard
+        order (also kept on ``self.shard_reports``) — sequentially
+        in-process, or concurrently across the worker pool."""
+        if self._runner is not None:
+            reports = self._runner.run_all(until)
+        else:
+            reports = [ctl.run(until) for ctl in self.controllers]
         self.shard_reports = reports
-        return merged
+        return reports
+
+    def run(self, until: Optional[float] = None) -> FleetReport:
+        """Drain every shard and merge. With ``parallel="off"`` shards run
+        sequentially in-process; otherwise each runs to completion in its
+        own worker and only the report crosses back — either way the
+        merge is the exact-sum :meth:`FleetReport.merged` over the same
+        shard order, and the merged ``jobs_per_s`` uses the measured
+        coordinator wall."""
+        wall0 = time.perf_counter()
+        reports = self.run_shards(until)
+        return FleetReport.merged(
+            reports, wall_s=time.perf_counter() - wall0)
+
+    # --- worker lifecycle ---------------------------------------------------
+    def close(self) -> None:
+        """Reap the worker pool (no-op for sequential fleets; idempotent).
+        Workers are per-fleet, so a fleet is single-use once closed."""
+        if self._runner is not None:
+            self._runner.close()
+
+    def __enter__(self) -> "ShardedFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -201,8 +201,7 @@ class StreamingGateway:
             return t is not None and (until is None or t <= until)
 
         while True:
-            for ctl in self.controllers:
-                ctl.pump(until)
+            self._pump_all(until)
             if not any(_due(ctl) for ctl in self.controllers):
                 if not self._deferred:
                     break
@@ -211,14 +210,26 @@ class StreamingGateway:
                 # than strand the deferred tail, then re-drain
                 now = max(ctl.events.now for ctl in self.controllers)
                 self._promote(now, force=True)
-        reports = [ctl.run(until) for ctl in self.controllers]
+        run_shards = getattr(self.fleet, "run_shards", None)
+        reports = run_shards(until) if run_shards is not None \
+            else [ctl.run(until) for ctl in self.controllers]
         return FleetReport.merged(reports,
                                   wall_s=time.perf_counter() - wall0)
 
-    def _pump_all(self, t: float, *, strict: bool,
+    def _pump_all(self, t: Optional[float], *, strict: bool = False,
                   horizon: Optional[float] = None) -> None:
-        for ctl in self.controllers:
-            ctl.pump(t, strict=strict, horizon=horizon)
+        """Advance every controller through one bounded quantum. A fleet
+        that exposes ``pump_all`` (the sharded fleet) owns the sweep — in
+        parallel mode that is one barriered concurrent quantum across the
+        worker pool, completions re-fired shard-major, so the watermark
+        rule drives all shards at once without touching any shard's
+        monotone clock."""
+        pump_all = getattr(self.fleet, "pump_all", None)
+        if pump_all is not None:
+            pump_all(t, strict=strict, horizon=horizon)
+        else:
+            for ctl in self.controllers:
+                ctl.pump(t, strict=strict, horizon=horizon)
 
     # --- admission ----------------------------------------------------------
     def _admit(self, batch: Sequence[TransferJob], t_close: float) -> None:

@@ -1,0 +1,228 @@
+"""Pickle round-trip contracts for everything that crosses the
+worker-process IPC boundary: jobs and plans (coordinator -> worker),
+fleet reports (worker -> coordinator) and frozen carbon-field snapshots
+(worker start). Property-tested through the optional-hypothesis shim."""
+import math
+import pickle
+
+import numpy as np
+import pytest
+
+from _hyp import given, hst, settings
+from repro.core.carbon.field import CarbonField
+from repro.core.carbon.intensity import PAPER_WINDOW_T0
+from repro.core.controlplane import FleetReport
+from repro.core.controlplane.controller import JobOutcome
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.planner import SLA, CarbonPlanner, TransferJob
+
+T0 = PAPER_WINDOW_T0
+
+_finite = hst.floats(0.0, 1e15, allow_nan=False, allow_infinity=False)
+_uuid = hst.text(alphabet="abcdef0123456789-", min_size=1, max_size=16)
+
+
+def _rt(obj):
+    return pickle.loads(pickle.dumps(obj))
+
+
+# --- TransferJob -------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(_uuid, _finite, _finite,
+       hst.sampled_from([("uc",), ("uc", "site_ne"), ("m1",)]),
+       hst.integers(1, 16), hst.integers(1, 8))
+def test_transfer_job_pickle_round_trip(uuid, size, deadline, replicas,
+                                        par, con):
+    job = TransferJob(uuid, size, replicas, "tacc",
+                      SLA(deadline_s=deadline), T0,
+                      parallelism=par, concurrency=con)
+    back = _rt(job)
+    assert back == job                  # frozen dataclass: field-exact
+    assert back.sla.deadline_s == job.sla.deadline_s
+    assert back.replicas == replicas
+
+
+# --- Plan (carries a NetworkPath) -------------------------------------------
+def test_plan_pickle_round_trip_is_field_exact():
+    pl = CarbonPlanner([FTN("uc", "skylake", 10.0),
+                        FTN("tacc", "cascade_lake", 10.0)])
+    job = TransferJob("rt0", 300e9, ("uc",), "tacc",
+                      SLA(deadline_s=24 * 3600.0), T0)
+    plan = pl.plan(job)
+    back = _rt(plan)
+    assert back == plan
+    assert back.path.hops == plan.path.hops
+    # hashable-by-value: a thawed worker's grid-cache lookups key on the
+    # unpickled hops tuple and must hit the coordinator's entries
+    assert hash(back.path.hops) == hash(plan.path.hops)
+
+
+# --- FleetReport -------------------------------------------------------------
+_row = hst.tuples(_finite, _finite, _finite, hst.integers(0, 4),
+                  hst.booleans())
+
+
+def _report_for(rows, wall_s=1.0):
+    outcomes = [JobOutcome(
+        job_uuid=f"j{i}", source="uc", ftn_sequence=("tacc",),
+        start_t=0.0, completed_t=60.0, planned_emissions_g=p,
+        actual_emissions_g=a, planned_duration_s=60.0,
+        actual_duration_s=60.0, migrations=m, replanned=False,
+        sla_miss=s, feasible=True)
+        for i, (p, a, _, m, s) in enumerate(rows)]
+    return FleetReport(
+        outcomes=outcomes, n_jobs=len(rows), n_completed=len(rows),
+        total_planned_g=sum(p for p, *_ in rows),
+        total_actual_g=sum(a for _, a, *_ in rows),
+        ledger_total_g=sum(led for _, _, led, *_ in rows),
+        migrations=sum(m for *_, m, _ in rows),
+        replan_events=1, plans_changed=0,
+        sla_misses=sum(s for *_, s in rows),
+        n_events=3 * len(rows), n_steps=2 * len(rows),
+        sim_span_s=60.0, wall_s=wall_s,
+        jobs_per_s=len(rows) / wall_s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hst.lists(hst.lists(_row, min_size=1, max_size=8),
+                 min_size=1, max_size=5))
+def test_fleet_report_pickle_round_trip_preserves_exact_merge(shards):
+    """The IPC contract behind ParallelShardRunner: merging unpickled
+    worker reports must equal merging the originals bit-for-bit — the
+    exact-sum FleetReport.merged property survives serialization."""
+    reports = [_report_for(s) for s in shards]
+    shipped = [_rt(r) for r in reports]
+    for orig, back in zip(reports, shipped):
+        assert back.total_actual_g == orig.total_actual_g
+        assert back.ledger_total_g == orig.ledger_total_g
+        assert back.outcomes == orig.outcomes
+    a, b = FleetReport.merged(reports), FleetReport.merged(shipped)
+    assert a.total_actual_g == b.total_actual_g
+    assert a.total_planned_g == b.total_planned_g
+    assert a.ledger_total_g == b.ledger_total_g
+    assert (a.n_jobs, a.n_events, a.n_steps, a.migrations) == \
+        (b.n_jobs, b.n_events, b.n_steps, b.migrations)
+
+
+def test_fleet_report_nan_completed_t_survives_pickle():
+    """In-flight jobs cut by a horizon report completed_t=nan; pickling
+    must keep the row (nan != nan, so compare by uuid + isnan)."""
+    rep = _report_for([(1.0, 2.0, 2.0, 0, False)])
+    cut = FleetReport(**{**rep.__dict__,
+                         "outcomes": [rep.outcomes[0].__class__(
+                             **{**rep.outcomes[0].__dict__,
+                                "completed_t": float("nan")})]})
+    back = _rt(cut)
+    assert back.outcomes[0].job_uuid == "j0"
+    assert math.isnan(back.outcomes[0].completed_t)
+
+
+# --- FrozenField -------------------------------------------------------------
+def _warm_field(hours=24):
+    f = CarbonField()
+    ts = T0 + 60.0 * np.arange(hours * 60)
+    for z in ("US-TEX-ERCO", "CA-QC", "US-NY-NYIS"):
+        f.zone_ci(z, ts)
+    from repro.core.carbon.path import discover_path
+    f.hop_ci_matrix(discover_path("uc", "tacc"), ts[: 6 * 60])
+    return f
+
+
+def test_frozen_field_pickle_round_trip_is_bit_identical():
+    f = _warm_field()
+    frozen = _rt(f.freeze())
+    assert frozen.nbytes > 0
+    g = frozen.thaw()
+    ts = T0 + 37.0 * np.arange(500)
+    for z in ("US-TEX-ERCO", "CA-QC"):
+        assert g.zone_ci(z, ts).tolist() == f.zone_ci(z, ts).tolist()
+    from repro.core.carbon.path import discover_path
+    p = discover_path("uc", "tacc")
+    assert g.hop_ci_matrix(p, ts).tolist() == f.hop_ci_matrix(p, ts).tolist()
+
+
+def test_frozen_field_thaw_does_not_rehash_snapshot_range():
+    f = _warm_field(hours=8)
+    g = f.freeze().thaw()
+    g._zone_noise._hash = lambda *a: (_ for _ in ()).throw(
+        AssertionError("re-hashed inside the snapshot range"))
+    ts = T0 + 3600.0 * np.arange(8)
+    assert g.zone_ci("CA-QC", ts).shape == ts.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(hst.integers(1, 72), hst.integers(0, 400))
+def test_frozen_field_round_trip_property(hours, probe_min):
+    """Any warmed window survives freeze -> pickle -> thaw bit-exactly,
+    probed at an arbitrary minute offset inside the window."""
+    f = CarbonField()
+    ts = T0 + 3600.0 * np.arange(hours)
+    f.zone_ci("US-CAL-CISO", ts)
+    g = _rt(f.freeze()).thaw()
+    probe = T0 + 60.0 * probe_min
+    if probe < float(ts[-1]) + 3600.0:
+        assert g.zone_ci_scalar("US-CAL-CISO", probe) == \
+            f.zone_ci_scalar("US-CAL-CISO", probe)
+
+
+def test_frozen_grids_are_bounded_by_cache_cap():
+    f = _warm_field()
+    frozen = f.freeze()
+    assert len(frozen.grids) <= CarbonField._GRID_CACHE_MAX
+    lean = f.freeze(include_grids=False)
+    assert lean.grids == ()
+    assert lean.nbytes < frozen.nbytes or frozen.grids == ()
+
+
+def test_freeze_is_read_only_snapshot():
+    """Warming the source field further must not change an existing
+    snapshot (the worker's view is immutable once shipped)."""
+    f = _warm_field(hours=4)
+    frozen = f.freeze(include_grids=False)
+    before = {k: (h0, len(v)) for k, h0, v in frozen.zone_noise}
+    f.zone_ci("US-TEX-ERCO", T0 + 3600.0 * np.arange(200))   # extend source
+    after = {k: (h0, len(v)) for k, h0, v in frozen.zone_noise}
+    assert before == after
+
+
+def test_install_frozen_default_round_trips_via_default_field():
+    from repro.core.carbon import field as field_mod
+
+    f = _warm_field(hours=4)
+    frozen = f.freeze()
+    saved = (field_mod._DEFAULT, field_mod._DEFAULT_PID,
+             field_mod._DEFAULT_FROZEN)
+    try:
+        g = field_mod.install_frozen_default(frozen)
+        assert field_mod.default_field() is g
+        assert g.zone_ci_scalar("CA-QC", T0 + 1800.0) == \
+            f.zone_ci_scalar("CA-QC", T0 + 1800.0)
+    finally:
+        (field_mod._DEFAULT, field_mod._DEFAULT_PID,
+         field_mod._DEFAULT_FROZEN) = saved
+
+
+def test_hop_grid_cache_keys_survive_pickle():
+    """The grid cache is keyed by path identity *by value* (src, dst,
+    hops, t0, dt): an unpickled snapshot's keys must hit lookups made
+    with this process's own memoized paths."""
+    from repro.core.carbon.path import discover_path
+
+    f = CarbonField()
+    p = discover_path("uc", "tacc")
+    f._hop_ci_grid(p, T0, 60.0, 100)
+    frozen = _rt(f.freeze())
+    g = frozen.thaw()
+    key = (p.src, p.dst, p.hops, T0, 60.0)
+    assert key in g._hop_grid_cache
+    got = g._hop_ci_grid(p, T0, 60.0, 80)
+    assert got.tolist() == f._hop_ci_grid(p, T0, 60.0, 80).tolist()
+
+
+def test_sla_round_trip_and_stays_frozen():
+    import dataclasses
+
+    sla = SLA(deadline_s=3600.0, carbon_budget_g=None, w_perf=0.3)
+    assert _rt(sla) == sla
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        sla.deadline_s = 1.0            # the IPC boundary never mutates

@@ -1,0 +1,305 @@
+"""Process-parallel shard execution: worker-per-shard runs pinned
+bit-identical to the sequential oracle, per-quantum barrier pumping, the
+streaming gateway over worker pools, and fork/spawn safety of the
+process-wide field cache."""
+import multiprocessing as mp
+import os
+import pickle
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.carbon.field import CarbonField
+from repro.core.carbon.intensity import PAPER_WINDOW_T0
+from repro.core.controlplane import ShardedFleet
+from repro.core.controlplane.streaming import StreamingGateway
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.planner import SLA, TransferJob
+
+T0 = PAPER_WINDOW_T0
+FTNS = [FTN("uc", "skylake", 10.0), FTN("m1", "apple_m1", 1.2),
+        FTN("site_qc", "cascade_lake", 40.0),
+        FTN("tacc", "cascade_lake", 10.0)]
+
+HAVE_FORK = "fork" in mp.get_all_start_methods()
+# the parallel machinery itself is start-method agnostic; fork is the
+# cheap path every CI platform we target has, spawn is covered by the
+# dedicated spawn test
+MODE = "fork" if HAVE_FORK else "spawn"
+
+
+def _jobs(n=24, spread_s=1200.0):
+    return [TransferJob(f"p{i}", (300 + 53 * i % 1500) * 1e9,
+                        ("uc", "site_ne") if i % 2 else ("uc",), "tacc",
+                        SLA(deadline_s=(8 + i % 6) * 3600.0),
+                        T0 + i * spread_s) for i in range(n)]
+
+
+def _fleet(parallel, **kw):
+    """All fleets on the numpy batch backend: the equality contract is
+    bit-level, and numpy planning is deterministic on both sides of the
+    process boundary (fork workers force it anyway — XLA does not
+    survive a fork)."""
+    kw.setdefault("batch_backend", "numpy")
+    return ShardedFleet(FTNS, n_shards=3, migration_threshold=250.0,
+                        parallel=parallel, **kw)
+
+
+def _run(fleet, jobs):
+    fleet.submit_many(jobs)
+    fleet.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                       zones=("CA-QC", "US-NY-NYIS"))
+    rep = fleet.run()
+    fleet.close()
+    return rep
+
+
+# --- the acceptance pin ------------------------------------------------------
+def test_parallel_run_is_bit_identical_to_sequential_oracle():
+    """Acceptance: the parallel worker-per-shard run must merge to the
+    exact same FleetReport totals as the sequential oracle on identical
+    seeds — every total, counter and outcome row, not just within
+    tolerance — and the merged ledger audit must stay < 1e-9."""
+    jobs = _jobs()
+    seq = _run(_fleet("off"), jobs)
+    par = _run(_fleet(MODE), jobs)
+    assert seq.n_jobs == par.n_jobs == len(jobs)
+    assert seq.n_completed == par.n_completed == len(jobs)
+    assert par.total_actual_g == seq.total_actual_g
+    assert par.total_planned_g == seq.total_planned_g
+    assert par.ledger_total_g == seq.ledger_total_g
+    assert (par.n_events, par.n_steps, par.migrations, par.replan_events,
+            par.plans_changed, par.sla_misses) == \
+        (seq.n_events, seq.n_steps, seq.migrations, seq.replan_events,
+         seq.plans_changed, seq.sla_misses)
+    assert par.sim_span_s == seq.sim_span_s
+    assert par.outcomes == seq.outcomes          # same rows, same order
+    rel = abs(par.ledger_total_g - par.total_actual_g) \
+        / max(par.total_actual_g, 1e-12)
+    assert rel < 1e-9
+
+
+def test_parallel_routing_and_shard_reports():
+    jobs = _jobs(10)
+    fleet = _fleet(MODE)
+    rep = _run(fleet, jobs)
+    assert rep.n_completed == len(jobs)
+    per_shard = [r.n_jobs for r in fleet.shard_reports]
+    assert sum(per_shard) == len(jobs)
+    for job in jobs:
+        si = fleet.shard_of(job)
+        assert any(o.job_uuid == job.uuid
+                   for o in fleet.shard_reports[si].outcomes)
+
+
+def test_parallel_single_submit_routes_to_owning_shard():
+    fleet = _fleet(MODE)
+    job = _jobs(1)[0]
+    fleet.submit(job)
+    rep = fleet.run()
+    fleet.close()
+    assert rep.n_completed == 1
+    assert fleet.shard_reports[fleet.shard_of(job)].n_jobs == 1
+
+
+def test_parallel_validates_mode():
+    with pytest.raises(ValueError):
+        ShardedFleet(FTNS, parallel="threads")
+    with pytest.raises(ValueError):
+        # in-process objects cannot cross the spec boundary
+        ShardedFleet(FTNS, parallel=MODE, planner=object())
+
+
+def test_worker_construction_failure_surfaces_its_traceback():
+    """A bad controller kwarg only explodes inside the worker; the
+    coordinator must raise the worker's shipped traceback (not a bare
+    BrokenPipeError from writing to a dead pipe)."""
+    fleet = ShardedFleet(FTNS, n_shards=2, batch_backend="numpy",
+                         parallel=MODE, bogus_knob=1)
+    with pytest.raises(RuntimeError, match="bogus_knob"):
+        for job in _jobs(40):
+            fleet.submit(job)
+        fleet.run()
+    fleet.close()
+
+
+def test_parallel_close_is_idempotent_and_context_managed():
+    jobs = _jobs(6)
+    with _fleet(MODE) as fleet:
+        fleet.submit_many(jobs)
+        rep = fleet.run()
+        assert rep.n_completed == len(jobs)
+        fleet.close()
+    fleet.close()                       # second close is a no-op
+    with pytest.raises(RuntimeError):
+        # workers carry the shard state: a closed fleet must refuse to
+        # restart silently on fresh (empty) workers
+        fleet.submit(_jobs(1)[0])
+
+
+# --- per-quantum barrier pumping ---------------------------------------------
+def test_pump_all_in_quanta_equals_one_terminal_run():
+    """Driving the worker pool in bounded time quanta (the streaming
+    gateway's watermark pattern) then finishing with run() must replay
+    exactly the run a single drain would have produced — the resumable
+    pump contract, now across process boundaries."""
+    jobs = _jobs(18)
+    seq = _run(_fleet("off"), jobs)
+
+    fleet = _fleet(MODE)
+    fleet.submit_many(jobs)
+    fleet.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                       zones=("CA-QC", "US-NY-NYIS"))
+    n_pumped = 0
+    for k in range(1, 9):               # eight 3 h quanta, then drain
+        # horizon=inf mirrors the gateway: the quantum cut must not
+        # fragment step batches, or the event count drifts vs one run
+        n_pumped += fleet.pump_all(T0 + k * 3 * 3600.0,
+                                   horizon=float("inf"))
+    rep = fleet.run()
+    fleet.close()
+    assert n_pumped > 0
+    assert rep.n_completed == seq.n_completed
+    assert rep.total_actual_g == seq.total_actual_g
+    assert rep.ledger_total_g == seq.ledger_total_g
+    assert (rep.n_events, rep.n_steps) == (seq.n_events, seq.n_steps)
+
+
+def test_proxy_clock_view_tracks_worker_state():
+    fleet = _fleet(MODE)
+    job = _jobs(1)[0]
+    fleet.submit(job)
+    proxy = fleet.controllers[fleet.shard_of(job)]
+    assert proxy.events.peek_t() is not None     # optimistic push hint
+    assert proxy.events.peek_t() == pytest.approx(job.submitted_t)
+    fleet.pump_all(job.submitted_t + 1.0)
+    assert proxy.events.now >= job.submitted_t   # authoritative after sync
+    fleet.run()
+    fleet.close()
+    assert proxy.events.peek_t() is None
+
+
+# --- the streaming gateway over a worker pool --------------------------------
+def test_streamed_gateway_over_parallel_fleet_equals_batch():
+    """window_s=0 streamed admission over the parallel fleet must replay
+    a batch submit_many run event for event (the gateway equivalence pin,
+    with the watermark pump now a per-quantum worker barrier)."""
+    jobs = _jobs(20, spread_s=700.0)
+    batch = _fleet("off")
+    batch.submit_many(jobs)
+    rb = batch.run()
+
+    par = _fleet(MODE)
+    gw = StreamingGateway(par, window_s=0.0)
+    rs = gw.run(iter(jobs))
+    par.close()
+    assert rs.n_completed == rb.n_completed == len(jobs)
+    assert rs.total_actual_g == rb.total_actual_g
+    assert rs.ledger_total_g == rb.ledger_total_g
+    assert rs.n_events == rb.n_events
+
+
+def test_capacity_gated_backfill_over_parallel_fleet():
+    """Capacity deferral + backfill across the IPC boundary: completions
+    ship back as data and re-fire the gateway's hooks, so deferred jobs
+    still promote (at quantum granularity) and every job completes with
+    the exact ledger audit intact."""
+    jobs = _jobs(20, spread_s=700.0)
+    fleet = _fleet(MODE)
+    gw = StreamingGateway(fleet, window_s=900.0, max_inflight=4,
+                          backfill=True)
+    rep = gw.run(iter(jobs))
+    fleet.close()
+    st = gw.stats()
+    assert rep.n_completed == len(jobs)
+    assert st.n_deferred > 0
+    assert st.n_promotions >= st.n_deferred
+    rel = abs(rep.ledger_total_g - rep.total_actual_g) \
+        / max(rep.total_actual_g, 1e-12)
+    assert rel < 1e-9
+
+
+# --- spawn-mode worker (ships the frozen snapshot instead of forking) --------
+def test_spawn_mode_matches_sequential():
+    if "spawn" not in mp.get_all_start_methods():
+        pytest.skip("no spawn start method")
+    jobs = _jobs(8)
+    seq = _run(_fleet("off"), jobs)
+    par = _run(_fleet("spawn"), jobs)
+    assert par.n_completed == seq.n_completed == len(jobs)
+    assert par.total_actual_g == seq.total_actual_g
+    assert par.ledger_total_g == seq.ledger_total_g
+    assert (par.n_events, par.n_steps) == (seq.n_events, seq.n_steps)
+
+
+# --- default_field() fork/spawn safety ---------------------------------------
+def test_forked_child_adopts_inherited_default_field():
+    if not HAVE_FORK:
+        pytest.skip("no fork start method")
+    import numpy as np
+
+    from repro.core.carbon import field as field_mod
+
+    f = field_mod.default_field()
+    ts = T0 + 3600.0 * np.arange(8)
+    parent_vals = f.zone_ci("US-TEX-ERCO", ts)
+
+    def child(conn):
+        g = field_mod.default_field()
+        # the inherited warm cache is adopted as this process's private
+        # copy (re-stamped, not re-hashed): the range is already dense
+        conn.send((field_mod._DEFAULT_PID == os.getpid(),
+                   g.zone_ci("US-TEX-ERCO", ts).tolist()))
+        conn.close()
+
+    ctx = mp.get_context("fork")
+    a, b = ctx.Pipe()
+    p = ctx.Process(target=child, args=(b,))
+    p.start()
+    assert a.poll(60), "forked child hung"
+    restamped, child_vals = a.recv()
+    p.join(10)
+    assert restamped
+    assert child_vals == parent_vals.tolist()
+
+
+def test_spawned_worker_rebuilds_default_field_from_frozen_snapshot(
+        tmp_path):
+    """Satellite regression: a spawned worker must not silently re-warm a
+    divergent process-wide cache. With the coordinator's snapshot
+    installed, the worker's default_field() must come back pre-warmed
+    (zero re-hashing over the snapshot range) and bit-identical."""
+    import numpy as np
+
+    f = CarbonField()
+    ts = T0 + 3600.0 * np.arange(12)
+    want = f.zone_ci("CA-QC", ts)
+    snap = tmp_path / "frozen.pkl"
+    snap.write_bytes(pickle.dumps(f.freeze()))
+    out = tmp_path / "vals.npy"
+    code = f"""
+import pickle, numpy as np
+from repro.core.carbon import field as field_mod
+
+frozen = pickle.loads(open({str(snap)!r}, "rb").read())
+field_mod.install_frozen_default(frozen)
+f = field_mod.default_field()
+# the snapshot must arrive warm: hashing even one hour in the snapshot
+# range means the worker silently rebuilt a divergent cache
+f._zone_noise._hash = lambda *a: (_ for _ in ()).throw(
+    AssertionError("re-hashed inside the snapshot range"))
+ts = {T0!r} + 3600.0 * np.arange(12)
+np.save({str(out)!r}, f.zone_ci("CA-QC", ts))
+print("OK")
+"""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+    got = np.load(out)
+    assert got.tolist() == want.tolist()
