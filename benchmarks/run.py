@@ -31,6 +31,7 @@ def _registry():
         ("fleet_sharded", P.fleet_sharded),
         ("fleet_streaming", P.fleet_streaming),
         ("fleet_matrix", P.fleet_matrix),
+        ("fleet_faults", P.fleet_faults),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

@@ -9,9 +9,13 @@
 # >= 4 CPUs — below that the numbers are recorded and the floor is
 # skipped — + streaming gateway, which gates a sustained-throughput floor
 # of 0.8x the co-measured sharded run, + the scenario x policy x window
-# matrix), refreshing BENCH_planner.json / BENCH_fleet.json, and with the
+# matrix, + the fault-injection durability bench, which gates an exact
+# merge after two worker kills + a backend fault and a <= 10% checkpoint
+# overhead), refreshing BENCH_planner.json / BENCH_fleet.json, with the
 # examples/fleet_stream.py end-to-end scenario run (backfill on, merged
-# ledger audit asserted).
+# ledger audit asserted), and with the seeded fault-injection soak
+# (RUN_SOAK=1: checkpoint/kill/restore the whole coordinator twice
+# mid-run, ledger audit < 1e-9 — the nightly durability job).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
@@ -29,5 +33,9 @@ if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
     --only fleet_streaming
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_matrix
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only fleet_faults
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/fleet_stream.py
+  RUN_SOAK=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q -m soak tests/test_persistence.py
 fi

@@ -427,6 +427,17 @@ class CarbonField:
         self._weight_fn_cache[key] = w_of
         return w_of
 
+    def __getstate__(self) -> Dict:
+        """Pickle support for checkpointing (``controlplane.persistence``):
+        the noise/band anchors travel — they are what make a restored
+        field's queries bit-identical without re-hashing — while the pure
+        caches are dropped (the weight-fn cache holds closures, and both
+        rebuild on demand to the same floats)."""
+        d = self.__dict__.copy()
+        d["_hop_grid_cache"] = {}
+        d["_weight_fn_cache"] = {}
+        return d
+
     def freeze(self, *, include_grids: bool = True) -> "FrozenField":
         """A pickle-cheap, read-only snapshot of this field's warmed state:
         the hashed noise ranges, per-device bands and (optionally) the

@@ -24,9 +24,15 @@ def __getattr__(name):
     if name in ("StreamingGateway", "GatewayStats"):
         from repro.core.controlplane import streaming
         return getattr(streaming, name)
-    if name in ("ParallelShardRunner", "ShardProxy", "ShardSpec"):
+    if name in ("ParallelShardRunner", "ShardProxy", "ShardSpec",
+                "ShardSupervisor", "SupervisionPolicy", "FaultPlan",
+                "FaultAction", "WorkerFailure", "WorkerDied",
+                "WorkerTimeout"):
         from repro.core.controlplane import parallel
         return getattr(parallel, name)
+    if name in ("FleetCheckpoint", "ShardState"):
+        from repro.core.controlplane import persistence
+        return getattr(persistence, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
@@ -35,4 +41,7 @@ __all__ = [
     "FleetController", "FleetReport", "JobOutcome", "ShardedFleet",
     "StreamingGateway", "GatewayStats",
     "ParallelShardRunner", "ShardProxy", "ShardSpec",
+    "ShardSupervisor", "SupervisionPolicy", "FaultPlan", "FaultAction",
+    "WorkerFailure", "WorkerDied", "WorkerTimeout",
+    "FleetCheckpoint", "ShardState",
 ]

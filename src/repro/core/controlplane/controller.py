@@ -108,6 +108,11 @@ class _JobRecord:
     observe_leg: Optional[Tuple[str, str]] = None
     power_segments: List[Tuple[float, Callable[[float], float]]] = \
         dataclasses.field(default_factory=list)  # (t_from, power_fn) history
+    # the picklable shadow of power_segments: (t_from, src, ftn name|None,
+    # relay node) per segment — everything _route_power needs to rebuild
+    # the closure history bit-identically after a checkpoint restore
+    route_log: List[Tuple[float, str, Optional[str], str]] = \
+        dataclasses.field(default_factory=list)
     dispatch_t: float = 0.0
     completed_t: Optional[float] = None
     actual_g: float = 0.0
@@ -116,6 +121,19 @@ class _JobRecord:
     replanned: bool = False
     sla_miss: bool = False
     ftn_sequence: Tuple[str, ...] = ()
+
+    def __getstate__(self) -> dict:
+        """Checkpoint support: the route closures (device-power /
+        emission-rate functions) do not pickle and are pure functions of
+        ``route_log`` + the carbon field, so the owning controller rebuilds
+        them on restore (``FleetController._rebuild_routes``)."""
+        d = self.__dict__.copy()
+        d["paths"] = ()
+        d["power_fn"] = None
+        d["rate_fn"] = None
+        d["leg_w_fns"] = ()
+        d["power_segments"] = []
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +178,11 @@ class FleetReport:
     sim_span_s: float
     wall_s: float
     jobs_per_s: float
+    # supervisor-surfaced fault handling: one human-readable line per
+    # degradation (worker respawn, backend fallback, parallel -> off).
+    # Empty on the sequential no-fault oracle, so report equality pins
+    # still hold; merged() concatenates in shard order.
+    degradations: Tuple[str, ...] = ()
 
     @classmethod
     def merged(cls, reports: Sequence["FleetReport"],
@@ -194,11 +217,15 @@ class FleetReport:
             n_steps=sum(r.n_steps for r in reports),
             sim_span_s=max((r.sim_span_s for r in reports), default=0.0),
             wall_s=wall,
-            jobs_per_s=n_completed / wall if wall > 0 else 0.0)
+            jobs_per_s=n_completed / wall if wall > 0 else 0.0,
+            degradations=tuple(d for r in reports
+                               for d in getattr(r, "degradations", ())))
 
     def summary(self) -> str:
         dev = (self.total_actual_g / self.total_planned_g - 1.0) * 100 \
             if self.total_planned_g else 0.0
+        deg = f"\ndegradations: {'; '.join(self.degradations)}" \
+            if self.degradations else ""
         return (
             f"fleet: {self.n_completed}/{self.n_jobs} jobs in "
             f"{self.sim_span_s / 3600:.1f} simulated h "
@@ -210,7 +237,8 @@ class FleetReport:
             f"{self.replan_events} re-plan sweeps "
             f"({self.plans_changed} plans changed), "
             f"{self.sla_misses} SLA misses\n"
-            f"runtime: {self.n_events} events, {self.n_steps} engine steps")
+            f"runtime: {self.n_events} events, {self.n_steps} engine steps"
+            f"{deg}")
 
 
 class FleetController:
@@ -272,6 +300,47 @@ class FleetController:
         self.sla_misses = 0
         self.n_steps = 0
         self.n_events = 0
+
+    # --- checkpoint support (controlplane.persistence) ----------------------
+    def __getstate__(self) -> Dict:
+        """One pickle of the controller is the whole-shard checkpoint: the
+        event heap, queue, ledger, records and noise anchors all travel in
+        a single dump so shared identity (queue handles aliasing heap
+        entries, the one ThroughputModel) survives via the pickle memo.
+        Completion hooks are driver wiring — drivers re-register them on
+        restore (see ``StreamingGateway``)."""
+        d = self.__dict__.copy()
+        d["completion_hooks"] = []
+        return d
+
+    def __setstate__(self, d: Dict) -> None:
+        self.__dict__.update(d)
+        self.completion_hooks = []
+        # the planner's drift hook is a bound method of this controller —
+        # nulled by CarbonPlanner.__getstate__, re-wired here
+        self.planner.emission_scale_fn = self._emission_scale
+        for rec in self._records.values():
+            self._rebuild_routes(rec)
+
+    def _rebuild_routes(self, rec: "_JobRecord") -> None:
+        """Replay a restored record's ``route_log`` through
+        :meth:`_route_power`, repopulating the closure history
+        (``power_segments``) and the current-route closures that
+        ``_JobRecord.__getstate__`` dropped. Bit-identical to the
+        uninterrupted run because ``_route_power`` is a pure function of
+        the route and the carbon field — the (drifted) throughput model
+        never enters."""
+        rec.power_segments = []
+        if not rec.route_log:
+            return
+        for t, source, ftn_name, relay in rec.route_log:
+            ftn = (self._ftn_by_name[ftn_name]
+                   if ftn_name is not None else None)
+            _legs, paths, power_fn, rate_fn, w_fns = \
+                self._route_power(rec.job, source, ftn, relay)
+            rec.power_segments.append((t, power_fn))
+        rec.paths, rec.leg_w_fns = paths, w_fns
+        rec.power_fn, rec.rate_fn = power_fn, rate_fn
 
     # --- submission / drift injection --------------------------------------
     def submit(self, job: TransferJob, plan: Optional[Plan] = None,
@@ -450,10 +519,8 @@ class FleetController:
         teach — None when nothing binds) for running ``job`` as
         source -> relay_node [-> job.dst] — shared by dispatch,
         post-migration rerouting and the migration emission guard."""
-        legs: List[Tuple[str, str]] = [(source, relay_node)]
-        if relay_node != job.dst:
-            legs.append((relay_node, job.dst))
-        paths = tuple(discover_path(a, b) for a, b in legs)
+        legs, paths, power_fn, rate_fn, w_fns = \
+            self._route_power(job, source, ftn, relay_node)
         leg_gbps = [self.engine.model.predict(a, b, job.parallelism,
                                               job.concurrency)
                     for a, b in legs]
@@ -468,6 +535,25 @@ class FleetController:
             observe_leg = legs[0]
         elif len(legs) > 1 and base >= leg_gbps[1] - 1e-12:
             observe_leg = legs[1]
+        return paths, base, power_fn, rate_fn, w_fns, observe_leg
+
+    def _route_power(self, job: TransferJob, source: str,
+                     ftn: Optional[FTN], relay_node: str
+                     ) -> Tuple[List[Tuple[str, str]],
+                                Tuple[NetworkPath, ...],
+                                Callable[[float], float],
+                                Callable[[float, float],
+                                         Tuple[float, float]],
+                                Tuple[Callable, ...]]:
+        """The closure half of :meth:`_route_for` — (legs, paths, power_fn,
+        rate_fn, per-leg weight fns). A pure function of the route and the
+        carbon field (the throughput model never enters), which is what
+        lets a checkpoint restore replay a record's ``route_log`` into a
+        bit-identical closure history (:meth:`_rebuild_routes`)."""
+        legs: List[Tuple[str, str]] = [(source, relay_node)]
+        if relay_node != job.dst:
+            legs.append((relay_node, job.dst))
+        paths = tuple(discover_path(a, b) for a, b in legs)
         relay_pm = (ftn.power_model if ftn is not None
                     else host_profile_for_endpoint(relay_node))
         sender_pm = HOST_PROFILES[self.engine.src_profile]
@@ -500,7 +586,7 @@ class FleetController:
                     p, w, t, zone_scale=scale)
             return w_tot, rate / 3.6e6
 
-        return paths, base, power_fn, rate_fn, w_fns, observe_leg
+        return legs, paths, power_fn, rate_fn, w_fns
 
     def _reroute(self, rec: _JobRecord, t: float) -> None:
         """(Re)derive paths, bottleneck rate and device power for the
@@ -518,6 +604,10 @@ class FleetController:
         rec.state.observe_on_finish = False
         rec.observe_leg = observe_leg
         rec.power_segments.append((t, power_fn))
+        rec.route_log.append((t, rec.state.src,
+                              rec.current_ftn.name
+                              if rec.current_ftn is not None else None,
+                              rec.state.dst))
 
     def _on_step(self, ev: StepTick) -> None:
         rec = self._active.get(ev.job_uuid)

@@ -37,6 +37,7 @@ shard planner backend (see ``core.controlplane.parallel``).
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import time
 from typing import Callable, List, Optional, Sequence, Union
@@ -45,9 +46,9 @@ import numpy as np
 
 from repro.core.carbon.field import CarbonField, default_field
 from repro.core.controlplane.controller import FleetController, FleetReport
-from repro.core.controlplane.parallel import (FORK_SAFE_BACKEND,
+from repro.core.controlplane.parallel import (FORK_SAFE_BACKEND, FaultPlan,
                                               ParallelShardRunner, ShardSpec,
-                                              resolve_mode)
+                                              SupervisionPolicy, resolve_mode)
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import CarbonPlanner, TransferJob
 
@@ -84,6 +85,8 @@ class ShardedFleet:
                  batch_backend: Optional[str] = None,
                  parallel: str = "off",
                  shard_backend: Optional[str] = None,
+                 supervision: Optional["SupervisionPolicy"] = None,
+                 fault_plan: Optional["FaultPlan"] = None,
                  **controller_kw):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -113,6 +116,10 @@ class ShardedFleet:
                     f"parallel workers rebuild their own {sorted(clash)} "
                     f"from the shard spec; pass planner knobs via "
                     f"shard_backend / batch_backend instead")
+        if fault_plan is not None and self.parallel == "off":
+            raise ValueError("fault_plan needs worker processes to fault; "
+                             "use parallel='fork'|'spawn'|'auto'")
+        self.supervision = supervision
         self._runner: Optional[ParallelShardRunner] = None
         if self.parallel == "off":
             self.controllers = [
@@ -124,7 +131,8 @@ class ShardedFleet:
                 for _ in range(n_shards)]
         else:
             self._runner = ParallelShardRunner(
-                n_shards, self._shard_specs, mode=self.parallel)
+                n_shards, self._shard_specs, mode=self.parallel,
+                supervision=supervision, fault_plan=fault_plan)
             self.controllers = self._runner.proxies
         # fleet-level admission planner: scores every submitted job's grid
         # in ONE batched call (base-capacity throughput model — in-run
@@ -140,6 +148,15 @@ class ShardedFleet:
     @property
     def n_shards(self) -> int:
         return len(self.controllers)
+
+    @property
+    def degradations(self) -> tuple:
+        """Supervisor-surfaced fault handling so far (worker respawns,
+        backend fallbacks, parallel -> off) — empty for a sequential
+        fleet and for a fault-free parallel run."""
+        if self._runner is None:
+            return ()
+        return tuple(self._runner.degradations)
 
     def _shard_specs(self) -> List[ShardSpec]:
         """Worker blueprints, built lazily at worker start: the field is
@@ -243,8 +260,13 @@ class ShardedFleet:
         coordinator wall."""
         wall0 = time.perf_counter()
         reports = self.run_shards(until)
-        return FleetReport.merged(
+        rep = FleetReport.merged(
             reports, wall_s=time.perf_counter() - wall0)
+        deg = self.degradations
+        if deg:
+            rep = dataclasses.replace(
+                rep, degradations=rep.degradations + deg)
+        return rep
 
     # --- worker lifecycle ---------------------------------------------------
     def close(self) -> None:

@@ -98,6 +98,12 @@ class StreamingGateway:
     (jobs beyond the window advance into it as promotions drain it).
     ``planner`` — admission planner override; defaults to the fleet-level
     planner (``ShardedFleet.planner``) or the controller's own.
+    ``checkpoint_every_s`` — durable streaming: capture a
+    :class:`~repro.core.controlplane.persistence.FleetCheckpoint` of the
+    fleet *and* the gateway's own admission state every so many sim
+    seconds of batch closes (kept on ``last_checkpoint`` and handed to
+    ``checkpoint_fn`` when given). A restored gateway
+    (``persistence.restore_gateway``) continues via :meth:`resume`.
     """
 
     def __init__(self, fleet, *, window_s: float = 300.0,
@@ -106,7 +112,9 @@ class StreamingGateway:
                  backfill: bool = False,
                  urgency_margin: float = 2.0,
                  backfill_lookahead: int = 64,
-                 planner: Optional[CarbonPlanner] = None):
+                 planner: Optional[CarbonPlanner] = None,
+                 checkpoint_every_s: Optional[float] = None,
+                 checkpoint_fn=None):
         if window_s < 0:
             raise ValueError(f"window_s must be >= 0, got {window_s}")
         if max_batch < 1:
@@ -117,6 +125,9 @@ class StreamingGateway:
         if backfill_lookahead < 1:
             raise ValueError(f"backfill_lookahead must be >= 1, "
                              f"got {backfill_lookahead}")
+        if checkpoint_every_s is not None and checkpoint_every_s <= 0:
+            raise ValueError(f"checkpoint_every_s must be > 0 or None, "
+                             f"got {checkpoint_every_s}")
         self.fleet = fleet
         self.controllers: List[FleetController] = list(
             getattr(fleet, "controllers", None) or [fleet])
@@ -138,6 +149,16 @@ class StreamingGateway:
         self.n_backfill_promotions = 0
         self.n_urgent_promotions = 0
         self._n_deferred_total = 0
+        # durability state: how many arrivals have been *consumed* (joined
+        # an admitted/deferred micro-batch — a pulled-but-unbatched
+        # arrival is NOT consumed and is re-pulled on resume), the stream
+        # time-order watermark, and the checkpoint cadence
+        self.checkpoint_every_s = checkpoint_every_s
+        self.checkpoint_fn = checkpoint_fn
+        self.last_checkpoint = None
+        self._consumed = 0
+        self._prev_t = -float("inf")
+        self._next_ckpt_t: Optional[float] = None
         if max_inflight is not None:
             for ctl in self.controllers:
                 ctl.completion_hooks.append(self._on_complete)
@@ -148,34 +169,49 @@ class StreamingGateway:
         """Drive the fleet open-loop from an arrival stream and return the
         merged report. Arrivals past ``until`` are never admitted (same
         visibility a terminal ``run(until)`` gives ``submit_many``)."""
+        return self._drive(iter(stream), until)
+
+    def resume(self, stream: Iterable[TransferJob],
+               until: Optional[float] = None) -> FleetReport:
+        """Continue a restored run (``persistence.restore_gateway``):
+        re-feed the SAME arrival stream the interrupted run was consuming
+        — streams are replayable *inputs*, not state — and the gateway
+        skips the ``_consumed`` arrivals that already joined a micro-batch
+        before the checkpoint. A pulled-but-unbatched arrival was not yet
+        consumed, so it is re-pulled here and the run continues exactly
+        where the cut fell."""
+        it = iter(stream)
+        for _ in range(self._consumed):
+            if next(it, None) is None:
+                break
+        return self._drive(it, until)
+
+    def _pull(self, it: Iterator[TransferJob]) -> Optional[TransferJob]:
+        job = next(it, None)
+        if job is not None and job.submitted_t < self._prev_t - 1e-9:
+            raise ValueError(
+                f"arrival stream is not time-ordered: {job.uuid} at "
+                f"t={job.submitted_t} after t={self._prev_t}")
+        if job is not None:
+            self._prev_t = job.submitted_t
+        return job
+
+    def _drive(self, it: Iterator[TransferJob],
+               until: Optional[float]) -> FleetReport:
         wall0 = time.perf_counter()
         horizon = float("inf") if until is None else until
-        prev_t = -float("inf")
-
-        def _pull(it: Iterator[TransferJob]) -> Optional[TransferJob]:
-            nonlocal prev_t
-            job = next(it, None)
-            if job is not None and job.submitted_t < prev_t - 1e-9:
-                raise ValueError(
-                    f"arrival stream is not time-ordered: {job.uuid} at "
-                    f"t={job.submitted_t} after t={prev_t}")
-            if job is not None:
-                prev_t = job.submitted_t
-            return job
-
-        it = iter(stream)
-        pending = _pull(it)
+        pending = self._pull(it)
         while pending is not None:
             if pending.submitted_t > horizon:
                 break
             t_open = pending.submitted_t
             batch = [pending]
-            pending = _pull(it)
+            pending = self._pull(it)
             while (pending is not None and len(batch) < self.max_batch
                    and pending.submitted_t <= t_open + self.window_s
                    and pending.submitted_t <= horizon):
                 batch.append(pending)
-                pending = _pull(it)
+                pending = self._pull(it)
             # the batch closes on its window timer — or at its last
             # member's arrival when max_batch filled it early (the gateway
             # has seen every member by then), and never past the run
@@ -194,6 +230,10 @@ class StreamingGateway:
             # stream vs the batch-mode run).
             self._pump_all(t_close, strict=True, horizon=horizon)
             self._admit(batch, t_close)
+            # the batch is durable fleet state now — only here do its
+            # members count as consumed (resume re-pulls anything later)
+            self._consumed += len(batch)
+            self._maybe_checkpoint(t_close)
         # stream exhausted (or horizon cut): drain everything still queued,
         # re-draining after completion hooks promote deferred jobs
         def _due(ctl: FleetController) -> bool:
@@ -213,8 +253,31 @@ class StreamingGateway:
         run_shards = getattr(self.fleet, "run_shards", None)
         reports = run_shards(until) if run_shards is not None \
             else [ctl.run(until) for ctl in self.controllers]
-        return FleetReport.merged(reports,
-                                  wall_s=time.perf_counter() - wall0)
+        rep = FleetReport.merged(reports,
+                                 wall_s=time.perf_counter() - wall0)
+        deg = tuple(getattr(self.fleet, "degradations", ()))
+        if deg:
+            rep = dataclasses.replace(
+                rep, degradations=rep.degradations + deg)
+        return rep
+
+    def _maybe_checkpoint(self, t_close: float) -> None:
+        """Capture a fleet+gateway checkpoint when the batch-close clock
+        crosses the cadence boundary (cadence anchors at the first close,
+        so a warm-up burst is not charged a capture per batch)."""
+        if self.checkpoint_every_s is None:
+            return
+        if self._next_ckpt_t is None:
+            self._next_ckpt_t = t_close + self.checkpoint_every_s
+            return
+        if t_close + 1e-9 < self._next_ckpt_t:
+            return
+        from repro.core.controlplane import persistence
+        self.last_checkpoint = persistence.capture(self.fleet, gateway=self)
+        if self.checkpoint_fn is not None:
+            self.checkpoint_fn(self.last_checkpoint)
+        while self._next_ckpt_t <= t_close + 1e-9:
+            self._next_ckpt_t += self.checkpoint_every_s
 
     def _pump_all(self, t: Optional[float], *, strict: bool = False,
                   horizon: Optional[float] = None) -> None:

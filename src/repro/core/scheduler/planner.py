@@ -127,6 +127,23 @@ class CarbonPlanner:
         self.emission_scale_fn: Optional[
             Callable[[NetworkPath, np.ndarray], np.ndarray]] = None
 
+    def __getstate__(self) -> dict:
+        """Pickle support for checkpointing: the jitted jax scorer does
+        not pickle (rebuilt on restore), and ``emission_scale_fn`` is the
+        owning controller's bound hook — the controller re-wires it in its
+        own ``__setstate__``, so a planner never drags a stale owner
+        through a checkpoint."""
+        d = self.__dict__.copy()
+        d["_jax_scorer"] = None
+        d["emission_scale_fn"] = None
+        return d
+
+    def __setstate__(self, d: dict) -> None:
+        self.__dict__.update(d)
+        if self.backend == "jax" and self._jax_scorer is None:
+            from repro.core.scheduler.grid_jax import JaxGridScorer
+            self._jax_scorer = JaxGridScorer(self.field)
+
     def _leg_emissions(self, path: NetworkPath, receiver, job: TransferJob,
                        ts: np.ndarray, gbps: float) -> np.ndarray:
         """Emission integral for one leg over all candidate starts — the

@@ -1,18 +1,24 @@
 """Process-parallel shard execution: worker-per-shard runs pinned
 bit-identical to the sequential oracle, per-quantum barrier pumping, the
-streaming gateway over worker pools, and fork/spawn safety of the
-process-wide field cache."""
+streaming gateway over worker pools, worker supervision (kill / hang /
+pipe / backend faults recover bit-identically), and fork/spawn safety of
+the process-wide field cache."""
+import dataclasses
 import multiprocessing as mp
 import os
 import pickle
+import signal
 import subprocess
 import sys
+import time
 
 import pytest
 
 from repro.core.carbon.field import CarbonField
 from repro.core.carbon.intensity import PAPER_WINDOW_T0
-from repro.core.controlplane import ShardedFleet
+from repro.core.controlplane import (FaultAction, FaultPlan, ShardedFleet,
+                                     SupervisionPolicy)
+from repro.core.controlplane.parallel import ParallelShardRunner
 from repro.core.controlplane.streaming import StreamingGateway
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import SLA, TransferJob
@@ -218,6 +224,204 @@ def test_capacity_gated_backfill_over_parallel_fleet():
     rel = abs(rep.ledger_total_g - rep.total_actual_g) \
         / max(rep.total_actual_g, 1e-12)
     assert rel < 1e-9
+
+
+# --- worker supervision: kills, hangs, pipe loss, backend faults -------------
+def _assert_identical(a, b):
+    """Bit-identical FleetReports modulo wall clock and the degradation
+    trail (the faulted run records its recoveries; the oracle has none)."""
+    for f in dataclasses.fields(a):
+        if f.name in ("wall_s", "jobs_per_s", "degradations"):
+            continue
+        assert getattr(a, f.name) == getattr(b, f.name), f.name
+
+
+def _drive(fleet, quanta=8, quantum_h=1.0):
+    for k in range(1, quanta + 1):
+        fleet.pump_all(T0 + k * quantum_h * 3600.0, strict=True,
+                       horizon=float("inf"))
+    return fleet.run()
+
+
+def test_mid_run_worker_kill_recovers_bit_identical():
+    """Satellite: SIGKILL a worker between pump quanta. The supervisor
+    must respawn it from the last per-shard checkpoint, replay the
+    command delta, and merge a report equal to the sequential oracle —
+    with the recovery surfaced in the report, not swallowed."""
+    jobs = _jobs(18)
+    seq = _fleet("off")
+    seq.submit_many(jobs)
+    oracle = _drive(seq)
+    assert oracle.degradations == ()
+
+    fleet = _fleet(MODE, supervision=SupervisionPolicy(checkpoint_every=2))
+    fleet.submit_many(jobs)
+    for k in range(1, 9):
+        fleet.pump_all(T0 + k * 3600.0, strict=True, horizon=float("inf"))
+        if k in (3, 6):                  # two kills, straddling checkpoints
+            victim = fleet._runner._handles[k % 3]
+            os.kill(victim.proc.pid, signal.SIGKILL)
+            victim.proc.join(5)
+    rep = fleet.run()
+    fleet.close()
+
+    _assert_identical(rep, oracle)
+    assert len(rep.degradations) == 2
+    assert all("respawned" in d for d in rep.degradations)
+    assert "degradations:" in rep.summary()
+    assert len(fleet._runner.recoveries) == 2
+    for rec in fleet._runner.recoveries:
+        assert rec["outcome"] == "respawn"
+        assert rec["wall_s"] >= 0.0
+
+
+def test_worker_kill_without_checkpoints_replays_full_journal():
+    """No checkpoint cadence: recovery must rebuild the dead shard from
+    scratch by replaying its entire command journal, still exactly."""
+    jobs = _jobs(10)
+    seq = _fleet("off")
+    seq.submit_many(jobs)
+    oracle = _drive(seq, quanta=4)
+
+    fleet = _fleet(MODE)                 # default policy: no checkpoints
+    fleet.submit_many(jobs)
+    for k in range(1, 5):
+        fleet.pump_all(T0 + k * 3600.0, strict=True, horizon=float("inf"))
+        if k == 2:
+            os.kill(fleet._runner._handles[0].proc.pid, signal.SIGKILL)
+    rep = fleet.run()
+    fleet.close()
+    _assert_identical(rep, oracle)
+    assert any("respawned" in d for d in rep.degradations)
+    assert fleet._runner.recoveries[0]["from_checkpoint"] is False
+
+
+def test_fault_plan_full_ladder_recovers_bit_identical():
+    """The whole fault matrix in one supervised run — worker kill, a
+    worker-reported backend fault, a severed pipe, and a hung worker
+    (caught by the command timeout) — and the merged report still equals
+    the no-fault sequential oracle with the ledger audit exact."""
+    jobs = _jobs(18)
+    seq = _fleet("off")
+    seq.submit_many(jobs)
+    seq.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                     zones=("CA-QC", "US-NY-NYIS"))
+    oracle = _drive(seq)
+
+    plan = FaultPlan(actions=(
+        FaultAction(quantum=1, shard=0, kind="kill"),
+        FaultAction(quantum=2, shard=1, kind="backend"),
+        FaultAction(quantum=3, shard=2, kind="kill"),
+        FaultAction(quantum=4, shard=1, kind="pipe"),
+        FaultAction(quantum=5, shard=0, kind="hang", severity_s=2.0),
+    ))
+    pol = SupervisionPolicy(command_timeout_s=0.75, checkpoint_every=2)
+    fleet = _fleet(MODE, supervision=pol, fault_plan=plan)
+    fleet.submit_many(jobs)
+    fleet.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                       zones=("CA-QC", "US-NY-NYIS"))
+    rep = _drive(fleet)
+    fleet.close()
+
+    _assert_identical(rep, oracle)
+    rel = abs(rep.ledger_total_g - rep.total_actual_g) \
+        / max(rep.total_actual_g, 1e-12)
+    assert rel < 1e-9
+    recs = fleet._runner.recoveries
+    assert len(recs) >= 5
+    reasons = " ".join(r["reason"] for r in recs)
+    assert "WorkerDied" in reasons
+    assert "WorkerTimeout" in reasons
+
+
+def test_backend_fault_downgrades_shard_to_numpy():
+    """Degradation ladder rung 1: a worker that *reports* a failure (is
+    alive, spoke a traceback) on a non-numpy shard backend respawns with
+    batch_backend='numpy' first — and, pre-fault jax having planned
+    nothing yet, the run still matches the numpy oracle exactly."""
+    from repro.core.scheduler.grid_jax import HAVE_JAX
+    if not HAVE_JAX:
+        pytest.skip("jax not importable")
+    jobs = _jobs(8)
+    seq = _fleet("off")
+    seq.submit_many(jobs)
+    oracle = _drive(seq, quanta=2, quantum_h=2.0)
+
+    plan = FaultPlan(actions=(
+        FaultAction(quantum=0, shard=1, kind="backend"),))
+    fleet = _fleet(MODE, shard_backend="jax", supervision=SupervisionPolicy(),
+                   fault_plan=plan)
+    fleet.submit_many(jobs)
+    rep = _drive(fleet, quanta=2, quantum_h=2.0)
+    fleet.close()
+    _assert_identical(rep, oracle)
+    assert any("jax -> numpy" in d for d in rep.degradations), \
+        rep.degradations
+
+
+def test_fault_plan_requires_timeout_for_hangs():
+    plan = FaultPlan(actions=(
+        FaultAction(quantum=0, shard=0, kind="hang", severity_s=1.0),))
+    with pytest.raises(ValueError, match="command_timeout_s"):
+        _fleet(MODE, fault_plan=plan)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        _fleet(MODE, fault_plan=FaultPlan(actions=(
+            FaultAction(quantum=0, shard=0, kind="gremlin"),)))
+    with pytest.raises(ValueError, match="fault_plan"):
+        _fleet("off", fault_plan=plan)
+
+
+def test_seeded_fault_plan_is_deterministic():
+    a = FaultPlan.seeded(3, seed=7, horizon=6, kills=2, backend_faults=1,
+                         hangs=1)
+    b = FaultPlan.seeded(3, seed=7, horizon=6, kills=2, backend_faults=1,
+                         hangs=1)
+    c = FaultPlan.seeded(3, seed=8, horizon=6, kills=2, backend_faults=1,
+                         hangs=1)
+    assert a.actions == b.actions
+    assert a.actions != c.actions
+    assert all(0 <= act.shard < 3 and 0 <= act.quantum < 6
+               for act in a.actions)
+
+
+def test_hung_worker_cannot_wedge_close():
+    """Satellite regression: close() must escalate join-timeout ->
+    terminate() -> kill() instead of blocking on a worker that will
+    never answer the stop command."""
+    fleet = _fleet(MODE)
+    fleet.submit(_jobs(1)[0])            # starts the workers
+    h = fleet._runner._handles[0]
+    h.send("_fault", ("sleep", 30.0))    # worker naps through its stop
+    t0 = time.monotonic()
+    h.close(timeout=0.5)
+    assert time.monotonic() - t0 < 10.0, "close() waited for the nap"
+    fleet.close()                        # remaining handles + the closed
+    assert time.monotonic() - t0 < 20.0  # one reap fast and idempotent
+
+
+def test_runner_del_is_idempotent_with_close():
+    """Satellite regression: __del__ after close() (or on a half-built
+    runner) must be a silent no-op — interpreter shutdown runs it with
+    module globals already torn down."""
+    fleet = _fleet(MODE)
+    fleet.submit(_jobs(1)[0])
+    runner = fleet._runner
+    fleet.run()
+    fleet.close()
+    runner.__del__()                     # after close: no-op
+    runner.__del__()                     # and again
+    half = ParallelShardRunner.__new__(ParallelShardRunner)
+    half.__del__()                       # never __init__-ed: no-op
+
+    fleet2 = _fleet(MODE)
+    fleet2.submit(_jobs(1)[0])
+    runner2 = fleet2._runner
+    handles = list(runner2._handles)     # close() hands the list off
+    runner2.__del__()                    # dropped without close(): reaps
+    assert runner2._closed
+    for h in handles:
+        with pytest.raises(ValueError):  # multiprocessing's closed-proc
+            h.proc.is_alive()            # marker: the worker was reaped
 
 
 # --- spawn-mode worker (ships the frozen snapshot instead of forking) --------
