@@ -27,6 +27,7 @@ def _registry():
         ("carbon_field", P.carbon_field),
         ("planner_scan", P.planner_scan),
         ("planner_multi_device", P.planner_multi_device),
+        ("planner_scale", P.planner_scale),
         ("fleet_loop", P.fleet_loop),
         ("fleet_sharded", P.fleet_sharded),
         ("fleet_streaming", P.fleet_streaming),

@@ -3,7 +3,9 @@
 # subdirectory; mirrors exactly what CI runs. The docs gate (intra-repo
 # markdown links + docs/ snippet execution) always runs; set CHECK_BENCH=1
 # to follow the tests with the bench smoke (planner grid scan + forced
-# multi-device shard_map sweep + fleet control loop + sharded scale-out
+# multi-device shard_map sweep + the 10^4 planner_scale admission rung,
+# which gates oracle + pallas-interpret spot-checks — raise the rungs
+# with BENCH_PLANNER_SCALE_RUNGS — + fleet control loop + sharded scale-out
 # sweep incl. the process-parallel worker-per-shard runner, which gates
 # an exact-merge match always and a >= 2x throughput floor on hosts with
 # >= 4 CPUs — below that the numbers are recorded and the floor is
@@ -25,6 +27,9 @@ if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
     --only planner_scan
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only planner_multi_device
+  BENCH_PLANNER_SCALE_RUNGS="${BENCH_PLANNER_SCALE_RUNGS:-10000}" \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only planner_scale
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_loop
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \

@@ -62,12 +62,16 @@ class ShardedFleet:
     """N partitioned :class:`FleetController` shards, one merged report.
 
     ``batch_backend`` is forwarded to the fleet-level admission planner
-    ("jax" stacks the fleet's full-scan planning into one jitted call;
-    None picks jax when available, numpy otherwise). ``shard_backend``
-    is the *shard planners'* batch backend — the in-run re-plan sweeps —
-    and defaults to ``batch_backend``, except under ``parallel="fork"``
-    where it defaults to the numpy oracle (XLA does not survive a fork;
-    see ``core.controlplane.parallel``). Remaining keyword arguments are
+    ("pallas" fuses the admission sweep's scoring chain + per-cell argmin
+    into the tiled ``grid_pallas`` kernel; "jax" stacks the fleet's
+    full-scan planning into one jitted lattice call; None picks jax when
+    available, numpy otherwise — the planner itself degrades pallas ->
+    jax when Pallas cannot run, so admission never silently drops to
+    oracle speed). ``shard_backend`` is the *shard planners'* batch
+    backend — the in-run re-plan sweeps — and defaults to
+    ``batch_backend``, except under ``parallel="fork"`` where it defaults
+    to the numpy oracle (XLA does not survive a fork; see
+    ``core.controlplane.parallel``). Remaining keyword arguments are
     forwarded to every ``FleetController``.
 
     ``parallel`` selects the shard execution engine: ``"off"`` (default)

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -314,6 +314,37 @@ def _device_count() -> int:
         return 1
 
 
+def _iter_chunks(cells: Sequence[CellTask], slot_stride: int,
+                 max_elems: int) -> Iterator[List[int]]:
+    """Split a fleet of cells into anchor-sorted chunks whose
+    pairs*hops*grid element count stays under ``max_elems`` (pathological
+    fleets with thousands of distinct anchors would otherwise materialize
+    a multi-GB CI grid in one call). Yields lists of original indices —
+    shared by the jitted lattice path and the fused Pallas path, so both
+    see identical chunk boundaries for a given budget."""
+    order = sorted(range(len(cells)),
+                   key=lambda i: cells[i].legs[0].anchor)
+    i = 0
+    while i < len(order):
+        chunk: List[int] = []
+        pairs: Dict[Tuple, None] = {}
+        grid_max = hops_max = 0
+        while i < len(order):
+            c = cells[order[i]]
+            trial = dict(pairs)
+            for leg in c.legs:
+                # discover_path memoizes paths: identity is a stable key
+                trial.setdefault((leg.anchor, id(leg.path)), None)
+            g = max(grid_max, (c.n_slots - 1) * slot_stride + c.n_steps)
+            h = max(hops_max, max(leg.path.n_hops for leg in c.legs))
+            if chunk and len(trial) * h * g > max_elems:
+                break
+            pairs, grid_max, hops_max = trial, g, h
+            chunk.append(order[i])
+            i += 1
+        yield chunk
+
+
 def batch_cell_emissions(field: CarbonField, cells: Sequence[CellTask], *,
                          dt_s: float = 60.0, slot_stride: int = 60,
                          shard: Optional[bool] = None) -> List[np.ndarray]:
@@ -334,29 +365,7 @@ def batch_cell_emissions(field: CarbonField, cells: Sequence[CellTask], *,
     if shard and n_dev < 2:
         n_dev = 1
     out: List[Optional[np.ndarray]] = [None] * len(cells)
-    # chunk the fleet so pairs*hops*grid stays under the element budget
-    # (pathological fleets with thousands of distinct anchors would
-    # otherwise materialize a multi-GB CI grid in one call)
-    order = sorted(range(len(cells)),
-                   key=lambda i: cells[i].legs[0].anchor)
-    i = 0
-    while i < len(order):
-        chunk: List[int] = []
-        pairs: Dict[Tuple, None] = {}
-        grid_max = hops_max = 0
-        while i < len(order):
-            c = cells[order[i]]
-            trial = dict(pairs)
-            for leg in c.legs:
-                # discover_path memoizes paths: identity is a stable key
-                trial.setdefault((leg.anchor, id(leg.path)), None)
-            g = max(grid_max, (c.n_slots - 1) * slot_stride + c.n_steps)
-            h = max(hops_max, max(leg.path.n_hops for leg in c.legs))
-            if chunk and len(trial) * h * g > _MAX_ELEMS:
-                break
-            pairs, grid_max, hops_max = trial, g, h
-            chunk.append(order[i])
-            i += 1
+    for chunk in _iter_chunks(cells, slot_stride, _MAX_ELEMS):
         for ci_, emis in zip(chunk, _score_chunk(
                 field, [cells[j] for j in chunk], dt_s=dt_s,
                 slot_stride=slot_stride, n_dev=n_dev)):
@@ -364,9 +373,44 @@ def batch_cell_emissions(field: CarbonField, cells: Sequence[CellTask], *,
     return out                         # type: ignore[return-value]
 
 
-def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
-                 dt_s: float, slot_stride: int, n_dev: int
-                 ) -> List[np.ndarray]:
+@dataclasses.dataclass
+class ChunkTables:
+    """Host-built padded tables for one anchor-sorted chunk of cells.
+
+    One builder serves both fleet scorers: the jitted lattice kernel
+    (:func:`_score_chunk`) and the fused Pallas planner kernel
+    (``grid_pallas``) consume the same arrays, so padding/masking
+    semantics — zero-weight pad hops, ``n_steps=1`` pad cells, bucketed
+    axis lengths — are defined exactly once.
+    """
+    zcols: Tuple[np.ndarray, ...]      # base/amp/dip/namp/peak (n_z,) f32
+    znoise: np.ndarray                 # (n_z, hours) f32, pre-scaled
+    cal_a: np.float32
+    cal_b: np.float32
+    h_of_day0: float                   # t0w-derived traced time constants
+    day_frac_s: float
+    dow0: int
+    zone_idx: np.ndarray               # (n_p, n_hops) i32
+    band: np.ndarray                   # (n_p, n_hops) f32
+    hnoise: np.ndarray                 # (n_p, n_hops, hours) f32
+    rel0a: np.ndarray                  # (n_anch,) f64, anchor - t0w
+    anchor_idx: np.ndarray             # (n_a,) i32 pair -> anchor row
+    path_idx: np.ndarray               # (n_a,) i32 pair -> path row
+    pair_idx: np.ndarray               # (n_c, 2) i32 cell -> pair rows
+    w_dev: np.ndarray                  # (n_c, 2, n_hops) f64
+    n_steps: np.ndarray                # (n_c,) i32 (pads: 1)
+    rem: np.ndarray                    # (n_c,) f64 (pads: 0)
+    n_grid_pad: int
+    n_slots_pad: int
+    n_hops: int
+    n_pairs: int                       # live (anchor, path) pairs
+    pair_paths: List[NetworkPath]      # per live pair, kernel row order
+    pair_anchors: List[float]          # per live pair, kernel row order
+
+
+def _chunk_tables(field: CarbonField, cells: Sequence[CellTask], *,
+                  dt_s: float, slot_stride: int,
+                  cell_bucket: int) -> ChunkTables:
     # --- dedupe (anchor, path) pairs and paths ----------------------------
     paths: Dict[Tuple, int] = {}
     path_objs: List[NetworkPath] = []
@@ -430,8 +474,7 @@ def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
     path_idx[:len(pair_path)] = pair_path
     anchor_idx = np.zeros(n_a, dtype=np.int32)
     anchor_idx[:len(pair_anchor)] = pair_anchor
-    # the cell axis must split evenly across devices for shard_map
-    n_c = _round_up(len(cells), math.lcm(_B_CELLS, max(n_dev, 1)))
+    n_c = _round_up(len(cells), cell_bucket)
     pair_idx = np.zeros((n_c, 2), dtype=np.int32)
     w_dev = np.zeros((n_c, 2, n_hops))
     n_steps = np.ones(n_c, dtype=np.int32)
@@ -442,19 +485,39 @@ def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
             w_dev[ci_, li, :leg.path.n_hops] = leg.w_dev
         n_steps[ci_] = c.n_steps
         rem[ci_] = c.rem_s
-    n_grid_pad = _round_up(n_grid, _GRID_BUCKET)
-    n_slots_pad = _round_up(n_slots, _B_SLOTS)
+    inv_pair: List[Optional[Tuple[float, int]]] = [None] * len(pair_ids)
+    for (anchor, _pk), row in pair_ids.items():
+        inv_pair[row] = (anchor, pair_path[row])
+    return ChunkTables(
+        zcols=tuple(_zcol(a) for a in ("base_ci", "diurnal_amp",
+                                       "solar_dip", "noise", "peak_hour")),
+        znoise=znoise, cal_a=np.float32(cal_a), cal_b=np.float32(cal_b),
+        h_of_day0=(t0w / 3600.0) % 24.0,
+        day_frac_s=t0w - 86400.0 * math.floor(t0w / 86400.0),
+        dow0=int(t0w // 86400.0) % 7,
+        zone_idx=zone_idx, band=band, hnoise=hnoise, rel0a=rel0a,
+        anchor_idx=anchor_idx, path_idx=path_idx, pair_idx=pair_idx,
+        w_dev=w_dev, n_steps=n_steps, rem=rem,
+        n_grid_pad=_round_up(n_grid, _GRID_BUCKET),
+        n_slots_pad=_round_up(n_slots, _B_SLOTS),
+        n_hops=n_hops, n_pairs=len(pair_ids),
+        pair_paths=[path_objs[p] for _, p in inv_pair],
+        pair_anchors=[a for a, _ in inv_pair])
+
+
+def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
+                 dt_s: float, slot_stride: int, n_dev: int
+                 ) -> List[np.ndarray]:
+    # the cell axis must split evenly across devices for shard_map
+    t = _chunk_tables(field, cells, dt_s=dt_s, slot_stride=slot_stride,
+                      cell_bucket=math.lcm(_B_CELLS, max(n_dev, 1)))
     with enable_x64():
         emis = np.asarray(_batch_kernel()(
-            _zcol("base_ci"), _zcol("diurnal_amp"), _zcol("solar_dip"),
-            _zcol("noise"), _zcol("peak_hour"), znoise,
-            np.float32(cal_a), np.float32(cal_b),
-            (t0w / 3600.0) % 24.0,
-            t0w - 86400.0 * math.floor(t0w / 86400.0),
-            np.int32(int(t0w // 86400.0) % 7),
-            rel0a, anchor_idx, zone_idx, band, hnoise, path_idx,
-            pair_idx, w_dev, n_steps, rem,
-            n_grid=n_grid_pad, n_slots=n_slots_pad,
+            *t.zcols, t.znoise, t.cal_a, t.cal_b,
+            t.h_of_day0, t.day_frac_s, np.int32(t.dow0),
+            t.rel0a, t.anchor_idx, t.zone_idx, t.band, t.hnoise,
+            t.path_idx, t.pair_idx, t.w_dev, t.n_steps, t.rem,
+            n_grid=t.n_grid_pad, n_slots=t.n_slots_pad,
             slot_stride=slot_stride, dt_s=float(dt_s), n_dev=n_dev),
             dtype=np.float64)
     return [emis[ci_, :len(c.legs), :c.n_slots]

@@ -94,9 +94,9 @@ class CarbonPlanner:
         if backend not in ("numpy", "jax"):
             raise ValueError(f"backend must be 'numpy' or 'jax', got "
                              f"{backend!r}")
-        if batch_backend not in (None, "numpy", "jax"):
-            raise ValueError(f"batch_backend must be None, 'numpy' or "
-                             f"'jax', got {batch_backend!r}")
+        if batch_backend not in (None, "numpy", "jax", "pallas"):
+            raise ValueError(f"batch_backend must be None, 'numpy', 'jax' "
+                             f"or 'pallas', got {batch_backend!r}")
         self.ftns = list(ftns)
         self._ftn_by_name = {f.name: f for f in self.ftns}
         self.throughput = throughput or ThroughputModel()
@@ -109,16 +109,26 @@ class CarbonPlanner:
             from repro.core.scheduler.grid_jax import JaxGridScorer
             self._jax_scorer = JaxGridScorer(self.field)
         # batch_backend governs plan_batch's *full-scan* path only: "jax"
-        # routes whole fleets through the one-jit plan_batch_jax while
-        # single plan()/rescore() calls stay on ``backend`` (small arrays
-        # beat jit dispatch there). None follows ``backend``.
+        # routes whole fleets through the one-jit plan_batch_jax, "pallas"
+        # additionally fuses the scoring chain + per-cell argmin into the
+        # tiled grid_pallas kernel, while single plan()/rescore() calls
+        # stay on ``backend`` (small arrays beat jit dispatch there).
+        # None follows ``backend``. The ladder degrades automatically:
+        # "pallas" without Pallas support falls back to "jax" here (and at
+        # runtime if the kernel fails to lower on this backend); "jax"
+        # without jax is an error (no silent oracle-speed planning).
         if batch_backend is None:
             batch_backend = backend
-        if batch_backend == "jax":
+        if batch_backend in ("jax", "pallas"):
             from repro.core.scheduler.grid_jax import HAVE_JAX
             if not HAVE_JAX:
-                raise ImportError("batch_backend='jax' needs jax; install "
-                                  "it or use batch_backend='numpy'")
+                raise ImportError(
+                    f"batch_backend={batch_backend!r} needs jax; install "
+                    f"it or use batch_backend='numpy'")
+        if batch_backend == "pallas":
+            from repro.core.scheduler.grid_pallas import PALLAS_AVAILABLE
+            if not PALLAS_AVAILABLE:
+                batch_backend = "jax"
         self.batch_backend = batch_backend
         # drift hook (the fleet controller's forecast-shock nowcast): a
         # (path, start_times) -> multiplier-array applied to the forecast
@@ -341,8 +351,13 @@ class CarbonPlanner:
     _BATCH_MIN_JOBS = 8
     _RESCORE_MIN_CELLS = 512
 
+    # observability: cell count of the most recent plan_batch_jax call —
+    # the scale bench reads it to report peak admission-grid size.
+    last_batch_cells = 0
+
     def _plan_batch_full(self, jobs: Sequence[TransferJob]) -> List[Plan]:
-        if self.batch_backend == "jax" and len(jobs) >= self._BATCH_MIN_JOBS:
+        if self.batch_backend in ("jax", "pallas") \
+                and len(jobs) >= self._BATCH_MIN_JOBS:
             return self.plan_batch_jax(jobs)
         return [self.plan(job) for job in jobs]
 
@@ -359,6 +374,15 @@ class CarbonPlanner:
         layout the batch kernel cannot host (non-dt-aligned slots, a rate
         grid past the per-cell cap) fall back to the numpy :meth:`plan`.
         ``shard`` is forwarded to the kernel's device-sharding gate.
+
+        With ``batch_backend="pallas"`` the same cell tables feed
+        ``grid_pallas.batch_cell_best`` instead: the scoring chain *and*
+        each cell's feasible-argmin run fused in a tiled Pallas kernel,
+        so only the per-cell winner (cost, emissions, slot) crosses back
+        to the host — the (cell, leg, slot) emission tensor is never
+        materialized and ``shard`` does not apply. If the kernel cannot
+        run on this backend the planner degrades to ``"jax"`` for the
+        rest of the session (one warning).
         """
         from repro.core.scheduler.grid_jax import (CellTask, LegTask,
                                                    _MAX_GRID,
@@ -370,6 +394,7 @@ class CarbonPlanner:
         stride = int(stride)
         sender = HOST_PROFILES["storage_frontend"]
         cells: List[CellTask] = []
+        sla_rows: List[Tuple] = []     # per cell, aligned with ``cells``
         meta: List[Optional[List[Tuple]]] = []
         wcache: dict = {}              # (path, recv, gbps, par, con) -> w
 
@@ -395,6 +420,7 @@ class CarbonPlanner:
                 if (len(ts) - 1) * stride + n_steps > _MAX_GRID:
                     jcells = None      # degenerate rate grid: numpy plan()
                     del cells[job_cell0:]   # drop its half-built cells
+                    del sla_rows[job_cell0:]
                     break
                 jcells.append((len(cells), ftn, src, paths, gbps, dur, ts))
                 cells.append(CellTask(
@@ -405,10 +431,35 @@ class CarbonPlanner:
                         for p in paths),
                     n_slots=len(ts), n_steps=n_steps,
                     rem_s=dur - (n_steps - 1) * dt_s))
+                # the deadline mask is monotone in the slot index, so the
+                # fused kernel takes it as a host-side count; the budget
+                # mask depends on in-kernel emissions and stays in-kernel
+                sla_rows.append((
+                    float(np.sum(ts + dur <= deadline_t + 1e-9)), dur,
+                    job.sla.w_perf / max(job.sla.deadline_s, 1.0),
+                    job.sla.w_carbon,
+                    job.sla.carbon_budget_g
+                    if job.sla.carbon_budget_g is not None else np.inf,
+                    job.submitted_t))
             meta.append(jcells)
+        self.last_batch_cells = len(cells)
+        fused = None                   # (cost, emis, slot) per cell
+        if cells and self.batch_backend == "pallas":
+            from repro.core.scheduler import grid_pallas
+            try:
+                fused = grid_pallas.batch_cell_best(
+                    self.field, cells, sla_rows, dt_s=dt_s,
+                    slot_stride=stride, slot_s=self.slot_s,
+                    scale_fn=self.emission_scale_fn)
+            except Exception as e:     # lowering/backend failure: degrade
+                import warnings
+                warnings.warn(f"pallas planner kernel unavailable "
+                              f"({e!r}); batch_backend degrades to 'jax'",
+                              RuntimeWarning, stacklevel=2)
+                self.batch_backend = "jax"
         tables = batch_cell_emissions(self.field, cells, dt_s=dt_s,
                                       slot_stride=stride, shard=shard) \
-            if cells else []
+            if cells and fused is None else []
         plans: List[Optional[Plan]] = []
         winners: List[Tuple[int, Tuple[TransferJob, Tuple, int]]] = []
         for job, jcells in zip(jobs, meta):
@@ -421,6 +472,15 @@ class CarbonPlanner:
             for idx, ftn, src, paths, gbps, dur, ts in jcells:
                 n_alt += len(ts)
                 if idx is None:
+                    continue
+                if fused is not None:  # in-kernel mask + argmin
+                    c_cost = float(fused[0][idx])
+                    if not math.isfinite(c_cost):
+                        continue
+                    if best is None or c_cost < best[0]:
+                        i = int(fused[2][idx])
+                        best = (c_cost, float(fused[1][idx]),
+                                float(ts[i]), ftn, src, paths, gbps, dur)
                     continue
                 tab = tables[idx]      # (n_legs, n_slots)
                 if self.emission_scale_fn is not None:
@@ -456,9 +516,11 @@ class CarbonPlanner:
         call (within float noise, ~1e-7, of per-job rescore — a sweep with
         ``drift_tol=0.0`` should therefore use the numpy backend, where
         re-scores are bit-stable); otherwise falls back to per-job
-        :meth:`rescore`. ``None`` entries mean the cell no longer exists
-        and the caller must full-plan."""
-        if self.batch_backend != "jax" \
+        :meth:`rescore`. The pallas batch backend re-scores on the same
+        lattice path — a re-score needs the cell's *value*, not a fused
+        argmin over slots. ``None`` entries mean the cell no longer
+        exists and the caller must full-plan."""
+        if self.batch_backend not in ("jax", "pallas") \
                 or len(jobs) < self._RESCORE_MIN_CELLS:
             return [self.rescore(j, p) if p is not None else None
                     for j, p in zip(jobs, previous)]

@@ -1,3 +1,62 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Optional accelerator-kernel layer: Pallas TPU kernels with jnp
+reference implementations (``ref.py``) and dispatch wrappers (``ops.py``).
+
+Everything here is exported *lazily*: importing ``repro.kernels`` never
+touches jax, and each attribute resolves its module on first access —
+so a host whose jax build has no Pallas support (or no jax at all) can
+still import the package and probe :data:`PALLAS_AVAILABLE`, and only
+fails, with a clear message, when it actually asks for a kernel. The
+planner's fused admission kernel (``batch_cell_best``) re-exports from
+``repro.core.scheduler.grid_pallas`` so kernel consumers have one
+import surface.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+# Only names that do NOT collide with a submodule: once a submodule is
+# imported Python pins it as a package attribute, which would shadow the
+# lazy resolver — the dispatch wrappers therefore stay importable from
+# ``repro.kernels.ops`` only.
+_LAZY = {
+    "flash_attention_kernel": "repro.kernels.flash_attention",
+    "ssd_scan_kernel": "repro.kernels.ssd_scan",
+    "batch_cell_best": "repro.core.scheduler.grid_pallas",
+}
+
+_probe_cache = None                    # None = not probed yet
+
+
+def pallas_available() -> bool:
+    """True when this jax build can import the Pallas API (probed once;
+    interpret-mode execution still counts — availability is about the
+    API, not about having a TPU)."""
+    global _probe_cache
+    if _probe_cache is None:
+        try:
+            importlib.import_module("jax.experimental.pallas")
+            _probe_cache = True
+        except Exception:              # pragma: no cover - env without jax
+            _probe_cache = False
+    return _probe_cache
+
+
+def __getattr__(name: str):
+    if name == "PALLAS_AVAILABLE":
+        return pallas_available()
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    if not pallas_available():
+        raise ImportError(
+            f"repro.kernels.{name} needs jax with Pallas support; this "
+            f"host has none — use the numpy/jax planner backends "
+            f"(CarbonPlanner degrades batch_backend='pallas' to 'jax' "
+            f"automatically)")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__() -> List[str]:
+    return sorted(list(globals()) + list(_LAZY) + ["PALLAS_AVAILABLE"])

@@ -339,14 +339,28 @@ def _batch_jobs(n=24):
             for i in range(n)]
 
 
-def test_plan_batch_jax_matches_numpy_oracle():
-    """Acceptance: the one-jit batched fleet path picks the same grid
-    cells as the numpy plan_batch oracle with emissions within 1e-4
-    relative (in practice ~1e-7)."""
+def _batch_planner(backend):
+    """Planner on the requested batch backend, skipping when the host
+    can't host it (pallas runs in interpret mode on CPU — slow but
+    exact — and is skipped only when the jax build lacks the API)."""
     pytest.importorskip("jax")
+    if backend == "pallas":
+        from repro.core.scheduler import grid_pallas
+        if not grid_pallas.PALLAS_AVAILABLE:
+            pytest.skip("jax build without Pallas support")
+    return CarbonPlanner(FTNS, batch_backend=backend)
+
+
+BATCH_BACKENDS = ["jax", "pallas"]
+
+
+@pytest.mark.parametrize("backend", BATCH_BACKENDS)
+def test_plan_batch_jax_matches_numpy_oracle(backend):
+    """Acceptance: the batched fleet paths (jax lattice and fused pallas
+    kernel alike) pick the same grid cells as the numpy plan_batch
+    oracle with emissions within 1e-4 relative (in practice ~1e-7)."""
     ref = CarbonPlanner(FTNS).plan_batch(_batch_jobs())
-    fast = CarbonPlanner(FTNS,
-                         batch_backend="jax").plan_batch_jax(_batch_jobs())
+    fast = _batch_planner(backend).plan_batch_jax(_batch_jobs())
     for a, b in zip(ref, fast):
         assert (a.start_t, a.source, a.ftn) == (b.start_t, b.source, b.ftn)
         assert b.predicted_emissions_g == pytest.approx(
@@ -357,23 +371,23 @@ def test_plan_batch_jax_matches_numpy_oracle():
         assert a.alternatives == b.alternatives
 
 
-def test_plan_batch_routes_through_jax_when_configured():
-    pytest.importorskip("jax")
+@pytest.mark.parametrize("backend", BATCH_BACKENDS)
+def test_plan_batch_routes_through_jax_when_configured(backend):
     jobs = _batch_jobs(12)
-    pl = CarbonPlanner(FTNS, batch_backend="jax")
+    pl = _batch_planner(backend)
     ref = CarbonPlanner(FTNS).plan_batch(jobs)
     for a, b in zip(ref, pl.plan_batch(jobs)):
         assert (a.start_t, a.source, a.ftn) == (b.start_t, b.source, b.ftn)
 
 
-def test_plan_batch_jax_infeasible_falls_back_like_numpy():
+@pytest.mark.parametrize("backend", BATCH_BACKENDS)
+def test_plan_batch_jax_infeasible_falls_back_like_numpy(backend):
     """A job no slot can satisfy must yield the same SLA-first fallback
     plan (start now, direct path, feasible=False) as the numpy oracle."""
-    pytest.importorskip("jax")
     job = TransferJob("late", 2000e9, ("uc",), "tacc",
                       SLA(deadline_s=120.0), T0)
     ref = CarbonPlanner(FTNS).plan(job)
-    fast = CarbonPlanner(FTNS, batch_backend="jax").plan_batch_jax([job])[0]
+    fast = _batch_planner(backend).plan_batch_jax([job])[0]
     assert not ref.feasible and not fast.feasible
     assert (ref.start_t, ref.source, ref.ftn) == \
         (fast.start_t, fast.source, fast.ftn)
@@ -381,10 +395,10 @@ def test_plan_batch_jax_infeasible_falls_back_like_numpy():
         ref.predicted_emissions_g, rel=1e-9)
 
 
-def test_plan_batch_jax_applies_emission_scale_hook():
+@pytest.mark.parametrize("backend", BATCH_BACKENDS)
+def test_plan_batch_jax_applies_emission_scale_hook(backend):
     """The controller's forecast-shock nowcast multiplies the forecast
-    integral per leg; the batched path must honor it like plan() does."""
-    pytest.importorskip("jax")
+    integral per leg; the batched paths must honor it like plan() does."""
     import numpy as np
 
     def scale(path, ts):
@@ -394,7 +408,7 @@ def test_plan_batch_jax_applies_emission_scale_hook():
     jobs = _batch_jobs(10)
     ref_pl = CarbonPlanner(FTNS)
     ref_pl.emission_scale_fn = scale
-    jax_pl = CarbonPlanner(FTNS, batch_backend="jax")
+    jax_pl = _batch_planner(backend)
     jax_pl.emission_scale_fn = scale
     for a, b in zip(ref_pl.plan_batch(jobs), jax_pl.plan_batch_jax(jobs)):
         assert (a.start_t, a.source, a.ftn) == (b.start_t, b.source, b.ftn)

@@ -83,6 +83,51 @@ def test_kernels_differentiable():
     assert bool(jnp.all(jnp.isfinite(gx)))
 
 
+def test_pallas_lazy_package_import_is_jax_free():
+    """Importing repro.kernels on a bare CPU host must not import jax:
+    a fresh interpreter imports the package, lists the lazy surface, and
+    only then is jax allowed to load (on attribute access)."""
+    import subprocess
+    import sys
+
+    code = (
+        "import sys; import repro.kernels as K; "
+        "assert 'jax' not in sys.modules, 'package import pulled in jax'; "
+        "names = dir(K); "
+        "assert 'batch_cell_best' in names and 'ssd_scan_kernel' in names; "
+        "ok = K.PALLAS_AVAILABLE; "
+        "assert 'jax' in sys.modules or not ok; "
+        "print('ok', ok)")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.startswith("ok")
+
+
+def test_pallas_available_probe_and_lazy_attrs():
+    import repro.kernels as K
+
+    assert isinstance(K.PALLAS_AVAILABLE, bool)
+    if K.PALLAS_AVAILABLE:
+        from repro.core.scheduler.grid_pallas import batch_cell_best
+        from repro.kernels.ssd_scan import ssd_scan_kernel
+        assert K.batch_cell_best is batch_cell_best
+        assert K.ssd_scan_kernel is ssd_scan_kernel
+    with pytest.raises(AttributeError):
+        K.no_such_kernel
+
+
+def test_pallas_missing_gives_clear_import_error(monkeypatch):
+    """With the probe forced False every lazy kernel name must fail with
+    an ImportError that names the degrade path, not an AttributeError."""
+    import repro.kernels as K
+
+    monkeypatch.setattr(K, "_probe_cache", False)
+    assert K.PALLAS_AVAILABLE is False
+    with pytest.raises(ImportError, match="batch_backend"):
+        K.batch_cell_best
+
+
 def test_ssd_chunk_invariance():
     """Chunk size must not change the result (associativity of the scan)."""
     x = _rand(4, (1, 512, 2, 16), jnp.float32)
