@@ -28,6 +28,7 @@ def _registry():
         ("planner_scan", P.planner_scan),
         ("planner_multi_device", P.planner_multi_device),
         ("planner_scale", P.planner_scale),
+        ("field_lattice", P.field_lattice),
         ("fleet_loop", P.fleet_loop),
         ("fleet_sharded", P.fleet_sharded),
         ("fleet_streaming", P.fleet_streaming),

@@ -5,7 +5,9 @@
 # to follow the tests with the bench smoke (planner grid scan + forced
 # multi-device shard_map sweep + the 10^4 planner_scale admission rung,
 # which gates oracle + pallas-interpret spot-checks — raise the rungs
-# with BENCH_PLANNER_SCALE_RUNGS — + fleet control loop + sharded scale-out
+# with BENCH_PLANNER_SCALE_RUNGS — + the field_lattice 8/64/200-zone
+# plan sweep, whose scalar-oracle spot-checks gate unconditionally on
+# every host — + fleet control loop + sharded scale-out
 # sweep incl. the process-parallel worker-per-shard runner, which gates
 # an exact-merge match always and a >= 2x throughput floor on hosts with
 # >= 4 CPUs — below that the numbers are recorded and the floor is
@@ -30,6 +32,8 @@ if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
   BENCH_PLANNER_SCALE_RUNGS="${BENCH_PLANNER_SCALE_RUNGS:-10000}" \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only planner_scale
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only field_lattice
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_loop
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \

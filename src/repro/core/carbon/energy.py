@@ -58,6 +58,16 @@ HOST_PROFILES: Dict[str, HostPowerModel] = {
     # object-store / filer frontend
     "storage_frontend": HostPowerModel("storage_frontend", 150.0, 250.0,
                                        80.0, 30.0, 50.0, 64),
+    # mesoscale lattice device tiers (core/carbon/lattice.py): an edge
+    # cache node is small and NIC-bound, a metro PoP a mid-size server, a
+    # core hub a beefy frontend — three distinct power curves so a
+    # cross-tier placement changes the [14] utilization integral, not just
+    # the zone trace under it.
+    "lat_edge": HostPowerModel("lat_edge", 18.0, 55.0, 10.0, 6.0, 2.5, 8),
+    "lat_metro": HostPowerModel("lat_metro", 75.0, 190.0, 30.0, 15.0,
+                                25.0, 32),
+    "lat_core": HostPowerModel("lat_core", 210.0, 360.0, 70.0, 40.0,
+                               100.0, 128),
 }
 
 
@@ -93,11 +103,24 @@ HOP_CLASSES: Dict[str, Dict[str, float]] = {
 
 
 def classify_hop(org: str) -> str:
-    if org in ("Internet2", "I2-NYC"):
+    if org in ("Internet2", "I2-NYC", "LatCore"):
         return "backbone"
-    if org in ("StarLight",):
+    if org in ("StarLight", "LatMetro"):
         return "metro"
     return "campus"
+
+
+def register_endpoint_profiles(profiles: Dict[str, str]) -> None:
+    """Bulk-extend the endpoint → host-profile map (idempotent for
+    identical entries; conflicting re-registration raises). Every value
+    must name an existing HOST_PROFILES entry."""
+    for name, profile in profiles.items():
+        if profile not in HOST_PROFILES:
+            raise KeyError(f"unknown host profile {profile!r}")
+        prev = ENDPOINT_PROFILES.get(name)
+        if prev is not None and prev != profile:
+            raise ValueError(f"endpoint {name!r} already mapped to {prev!r}")
+        ENDPOINT_PROFILES[name] = profile
 
 
 def hop_power_w(org: str, nic_gbps: float) -> float:

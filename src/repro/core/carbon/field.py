@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import importlib
 import math
 import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -122,6 +123,41 @@ class _NoiseTable:
         for key, h0, vals in snap:
             self._h0[key] = int(h0)
             self._vals[key] = np.asarray(vals)
+
+
+# --- topology setup replay -------------------------------------------------
+# Zones registered at runtime (the mesoscale lattice, ingested traces) are
+# module state *outside* the field's caches: REGIONS entries, IP/endpoint
+# registries, route providers. A spawn worker starts from a clean
+# interpreter, so a FrozenField alone cannot make its queries resolve —
+# the registrations must replay there. Subsystems record a deterministic,
+# picklable (entrypoint, args) step here; freeze() captures the list and
+# thaw() replays it (idempotently) before restoring the caches.
+_FIELD_SETUP: List[Tuple[str, Tuple]] = []
+
+
+def register_field_setup(entrypoint: str, *args) -> None:
+    """Record a topology-install step (``"pkg.module:function"`` + args,
+    all picklable) to replay in any process that thaws a frozen field cut
+    after this call. Duplicate records collapse."""
+    if ":" not in entrypoint:
+        raise ValueError(f"entrypoint must be 'module:function', got "
+                         f"{entrypoint!r}")
+    entry = (entrypoint, tuple(args))
+    if entry not in _FIELD_SETUP:
+        _FIELD_SETUP.append(entry)
+
+
+def replay_field_setup(entries: Sequence[Tuple[str, Tuple]]) -> None:
+    """Run recorded setup steps (import + call; each step is idempotent by
+    contract) and adopt them into this process's own record so a chained
+    freeze keeps carrying them."""
+    for entrypoint, args in entries:
+        mod_name, fn_name = entrypoint.split(":", 1)
+        getattr(importlib.import_module(mod_name), fn_name)(*args)
+        entry = (entrypoint, tuple(args))
+        if entry not in _FIELD_SETUP:
+            _FIELD_SETUP.append(entry)
 
 
 class CarbonField:
@@ -457,7 +493,8 @@ class CarbonField:
             zone_noise=self._zone_noise.snapshot(),
             hop_noise=self._hop_noise.snapshot(),
             hop_base=tuple(self._hop_base.items()),
-            grids=grids)
+            grids=grids,
+            setup=tuple(_FIELD_SETUP))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -472,9 +509,14 @@ class FrozenField:
     hop_noise: Tuple[Tuple[str, int, np.ndarray], ...]
     hop_base: Tuple[Tuple[str, float], ...]
     grids: Tuple[Tuple[Tuple, np.ndarray], ...] = ()
+    # recorded register_field_setup steps: what makes runtime-registered
+    # topology (lattice zones, ingested traces) resolve after crossing a
+    # spawn boundary — replayed by thaw() before any query runs.
+    setup: Tuple[Tuple[str, Tuple], ...] = ()
 
     def thaw(self) -> CarbonField:
         """Rebuild a warm :class:`CarbonField` from the snapshot."""
+        replay_field_setup(self.setup)
         f = CarbonField(calibrated=self.calibrated)
         f._zone_noise.restore(self.zone_noise)
         f._hop_noise.restore(self.hop_noise)

@@ -68,3 +68,51 @@ def haversine_km(a: Tuple[float, float], b: Tuple[float, float]) -> float:
     h = (math.sin(dlat / 2) ** 2
          + math.cos(lat1) * math.cos(lat2) * math.sin(dlon / 2) ** 2)
     return 2 * 6371.0 * math.asin(math.sqrt(h))
+
+
+# --- lattice topology helpers ----------------------------------------------
+# The mesoscale zone lattice (core/carbon/lattice.py) lays hundreds of zones
+# on a regular (row, col) grid over a geographic bounding box; hop graphs
+# between cells are haversine-derived (RTT and hub selection both follow
+# great-circle distance, the same rule discover_path applies to the named
+# testbed routes).
+
+def lattice_latlon(rows: int, cols: int,
+                   lat0: float, lat1: float,
+                   lon0: float, lon1: float) -> Dict[Tuple[int, int],
+                                                     Tuple[float, float]]:
+    """Cell (r, c) -> (lat, lon): rows span [lat1, lat0] north→south and
+    cols span [lon0, lon1] west→east, cells sitting at box centers so two
+    lattices over the same bbox with different resolutions never collide
+    exactly with each other's grid lines."""
+    if rows < 1 or cols < 1:
+        raise ValueError("lattice needs rows >= 1 and cols >= 1")
+    out: Dict[Tuple[int, int], Tuple[float, float]] = {}
+    for r in range(rows):
+        for c in range(cols):
+            lat = lat1 + (lat0 - lat1) * (r + 0.5) / rows
+            lon = lon0 + (lon1 - lon0) * (c + 0.5) / cols
+            out[(r, c)] = (round(lat, 6), round(lon, 6))
+    return out
+
+
+def nearest_of(point: Tuple[float, float],
+               candidates: Dict[str, Tuple[float, float]]) -> str:
+    """The candidate key geographically nearest to ``point`` (haversine;
+    deterministic tie-break on the key). How an edge cell picks its metro
+    hub and a metro hub its core hub."""
+    if not candidates:
+        raise ValueError("no candidates")
+    return min(candidates,
+               key=lambda k: (haversine_km(point, candidates[k]), k))
+
+
+def register_ips(infos: Dict[str, IPInfo]) -> None:
+    """Bulk-extend the IP registry (idempotent for identical records;
+    conflicting re-registration raises — a silently re-homed hop would
+    shift every cached path CI built through it)."""
+    for ip, info in infos.items():
+        prev = IP_DB.get(ip)
+        if prev is not None and prev != info:
+            raise ValueError(f"ip {ip!r} already registered differently")
+        IP_DB[ip] = info

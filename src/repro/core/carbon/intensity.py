@@ -79,6 +79,20 @@ REGIONS: Dict[str, GridRegion] = {r.zone: r for r in [
 ]}
 
 
+def register_region(region: GridRegion) -> GridRegion:
+    """Add one zone to the live registry (the lattice / trace-ingestion
+    growth path). Re-registering the same zone with identical parameters is
+    a no-op; conflicting parameters raise — two subsystems silently fighting
+    over one zone id would corrupt every cached trace derived from it.
+    """
+    prev = REGIONS.get(region.zone)
+    if prev is not None and prev != region:
+        raise ValueError(f"zone {region.zone!r} already registered with "
+                         f"different parameters")
+    REGIONS[region.zone] = region
+    return region
+
+
 def get_region(zone: str) -> GridRegion:
     return REGIONS[zone]
 

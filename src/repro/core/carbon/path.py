@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.carbon.geo import IPInfo, geolocate, haversine_km
 from repro.core.carbon.intensity import calibrated_ci
@@ -104,6 +104,35 @@ def _reverse(key: Tuple[str, str]) -> Optional[Sequence[str]]:
     return tuple(reversed(rev)) if rev is not None else None
 
 
+# Pluggable route resolution: a provider maps (src, dst) endpoint names to
+# an intermediate-hop IP tuple, or None to decline. The zone lattice
+# (core/carbon/lattice.py) resolves its O(zones²) cell-pair routes through
+# one provider closure instead of materializing them all in ROUTES; the
+# static registry above still wins for the named testbed pairs.
+RouteProvider = Callable[[str, str], Optional[Sequence[str]]]
+ROUTE_PROVIDERS: List[RouteProvider] = []
+
+
+def register_route_provider(provider: RouteProvider) -> None:
+    """Install a route provider (idempotent per callable identity). Clears
+    the ``discover_path`` memo: pairs previously resolved through the
+    default-core fallback must re-resolve through the new provider."""
+    if provider not in ROUTE_PROVIDERS:
+        ROUTE_PROVIDERS.append(provider)
+        discover_path.cache_clear()
+
+
+def register_endpoints(endpoints: Dict[str, str]) -> None:
+    """Bulk-extend the endpoint registry (idempotent for identical entries;
+    conflicting re-registration raises)."""
+    for name, ip in endpoints.items():
+        prev = ENDPOINTS.get(name)
+        if prev is not None and prev != ip:
+            raise ValueError(f"endpoint {name!r} already registered at "
+                             f"{prev!r}")
+        ENDPOINTS[name] = ip
+
+
 @functools.lru_cache(maxsize=None)
 def discover_path(src: str, dst: str, *, base_rtt_ms: float = 0.4
                   ) -> NetworkPath:
@@ -120,6 +149,11 @@ def discover_path(src: str, dst: str, *, base_rtt_ms: float = 0.4
     mids = ROUTES.get((src, dst))
     if mids is None:
         mids = _reverse((src, dst))
+    if mids is None:
+        for provider in ROUTE_PROVIDERS:
+            mids = provider(src, dst)
+            if mids is not None:
+                break
     if mids is None:
         # default: route through the Dallas I2 core
         mids = ("198.51.100.22", "198.51.100.31")

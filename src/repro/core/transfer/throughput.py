@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 # physical path capacity between endpoint pairs (Gbps); Table 2 NICs bound
 # the testbed nodes, site links bound the cluster sites.
@@ -28,10 +28,29 @@ LINK_GBPS: Dict[Tuple[str, str], float] = {
 }
 DEFAULT_GBPS = 10.0
 
+# Pluggable capacity resolution for endpoint families too large to
+# enumerate pairwise (the zone lattice's O(zones²) cell pairs): a provider
+# maps (src, dst) to Gbps or None to decline. The static registry wins,
+# then providers in registration order, then DEFAULT_GBPS.
+CapacityProvider = Callable[[str, str], Optional[float]]
+CAPACITY_PROVIDERS: List[CapacityProvider] = []
+
+
+def register_capacity_provider(provider: CapacityProvider) -> None:
+    """Install a link-capacity provider (idempotent per callable)."""
+    if provider not in CAPACITY_PROVIDERS:
+        CAPACITY_PROVIDERS.append(provider)
+
 
 def base_capacity(src: str, dst: str) -> float:
-    return (LINK_GBPS.get((src, dst)) or LINK_GBPS.get((dst, src))
-            or DEFAULT_GBPS)
+    cap = LINK_GBPS.get((src, dst)) or LINK_GBPS.get((dst, src))
+    if cap is not None:
+        return cap
+    for provider in CAPACITY_PROVIDERS:
+        cap = provider(src, dst)
+        if cap is not None:
+            return cap
+    return DEFAULT_GBPS
 
 
 def stream_efficiency(parallelism: int, concurrency: int) -> float:

@@ -16,8 +16,9 @@ clean-but-shockable alternative.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Callable, Dict, Iterator, Optional, Tuple
 
+from repro.core.carbon import lattice as _lattice
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import TransferJob
 from repro.core.workloads.generators import (DiurnalArrivals, LognormalSizes,
@@ -49,11 +50,24 @@ class Scenario:
     horizon_s: float = 24 * 3600.0
     shocks: Tuple[ScenarioShock, ...] = ()
     ftns: Tuple[FTN, ...] = dataclasses.field(default_factory=_default_ftns)
+    # optional topology hook run before the scenario resolves endpoints —
+    # the lattice scenarios install their ZoneLattice here, lazily and
+    # idempotently, so importing this module never mutates registries
+    setup: Optional[Callable[[], None]] = None
+
+    def prepare(self) -> "Scenario":
+        """Run the setup hook (idempotent). Called by ``jobs()`` and
+        ``get_scenario`` so both streaming and batch entry points see the
+        scenario's topology installed before any path resolves."""
+        if self.setup is not None:
+            self.setup()
+        return self
 
     def jobs(self, seed: int, t0: float) -> Iterator[TransferJob]:
         """The scenario's deterministic arrival stream: every workload
         seeded off ``seed`` (offset by its index, so streams stay
         independent), merged by submission time."""
+        self.prepare()
         return merge_streams(*(
             w.jobs(seed + 1000 * i, t0, self.horizon_s)
             for i, w in enumerate(self.workloads)))
@@ -61,6 +75,49 @@ class Scenario:
 
 _BULK_REPLICAS = (("site_ne", "site_or", "site_qc"), ("uc", "site_ne"),
                   ("uc",))
+
+# --- mesoscale lattice scenarios -------------------------------------------
+# Endpoint names and tiers are pure functions of the lattice spec, so the
+# *uninstalled* preset is enough to define the scenarios at import time;
+# the setup hook installs the real topology on first use.
+_LAT200 = _lattice.preset(200)
+_LAT_EDGE = tuple(_LAT200.endpoints("edge"))
+_LAT_METRO = tuple(_LAT200.endpoints("metro"))
+_LAT_CORE = tuple(_LAT200.endpoints("core"))
+_LAT_DST = _LAT_CORE[len(_LAT_CORE) // 2]      # a central core hub
+
+
+def _install_lat200() -> None:
+    _lattice.default_lattice(200)
+
+
+def _edge_tier_sets(n_sets: int = 16) -> Tuple[Tuple[str, ...], ...]:
+    """Cross-tier candidate sets: each job can source from two edge caches
+    plus a metro or core replica, striding the whole lattice so the
+    planner's space shift sweeps mesoscale CI variation, not one corner."""
+    sets = []
+    for i in range(n_sets):
+        e1 = _LAT_EDGE[(7 * i) % len(_LAT_EDGE)]
+        e2 = _LAT_EDGE[(7 * i + 93) % len(_LAT_EDGE)]
+        m = _LAT_METRO[i % len(_LAT_METRO)]
+        c = _LAT_CORE[i % len(_LAT_CORE)]
+        sets.append((e1, e2, m) if i % 2 else (e1, m, c))
+    return tuple(sets)
+
+
+def _fanout_sets(stride: int = 25) -> Tuple[Tuple[str, ...], ...]:
+    """25 disjoint 8-replica sets covering all 200 cells — the 100+-zone
+    fan-out the lattice planner sweep is sized for."""
+    eps = tuple(_LAT200.endpoints())
+    return tuple(tuple(eps[i::stride]) for i in range(stride))
+
+
+def _lattice_ftns(dst: str) -> Tuple[FTN, ...]:
+    ftns = [FTN(name, "lat_core", 100.0)
+            for name in _LAT_CORE[:3] if name != dst]
+    ftns.append(FTN(_LAT_METRO[0], "lat_metro", 25.0))
+    ftns.append(FTN(dst, "lat_core", 100.0))
+    return tuple(ftns)
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     Scenario(
@@ -103,6 +160,35 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
                               duration_s=6 * 3600.0,
                               zones=("CA-QC", "US-NY-NYIS")),)),
     Scenario(
+        name="edge_lattice_day",
+        description="Mesoscale lattice day: diurnal edge-cache traffic "
+                    "across the 200-zone lattice feeding a core hub, every "
+                    "job's replica set spanning edge/metro/core tiers — "
+                    "the cross-tier space-shifting regime CarbonEdge "
+                    "motivates.",
+        workloads=(Workload(
+            "edge", DiurnalArrivals(rate_per_h=24.0, amplitude=0.6,
+                                    peak_hour=14.0),
+            UniformSizes(lo_gb=20.0, hi_gb=120.0),
+            replica_sets=_edge_tier_sets(), dst=_LAT_DST,
+            deadline_h=(3.0, 10.0)),),
+        ftns=_lattice_ftns(_LAT_DST),
+        setup=_install_lat200),
+    Scenario(
+        name="metro_space_shift",
+        description="Space shift at 100+-zone fan-out: steady arrivals "
+                    "where every job carries an 8-replica candidate set "
+                    "striding all 200 lattice cells, so each admission "
+                    "sweep ranks the whole mesoscale field.",
+        workloads=(Workload(
+            "fanout", PoissonArrivals(rate_per_h=40.0),
+            LognormalSizes(median_gb=60.0, sigma=0.7),
+            replica_sets=_fanout_sets(), dst=_LAT_DST,
+            deadline_h=(4.0, 12.0)),),
+        horizon_s=12 * 3600.0,
+        ftns=_lattice_ftns(_LAT_DST),
+        setup=_install_lat200),
+    Scenario(
         name="heavy_tail_mix",
         description="Elephants and mice: Pareto(1.3) sizes over steady "
                     "arrivals — a few TB-scale jobs dominate the byte "
@@ -117,7 +203,7 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
 
 def get_scenario(name: str) -> Scenario:
     try:
-        return SCENARIOS[name]
+        return SCENARIOS[name].prepare()
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; available: "
                        f"{sorted(SCENARIOS)}") from None

@@ -1,0 +1,62 @@
+"""Bench-JSON merge semantics: re-running any one bench must never wipe
+the sections the others wrote. The old migration heuristic keyed off a
+fixed section-name list, so a file holding only a newer section (e.g.
+just ``fleet_matrix``) was treated as the pre-section flat layout and
+erased — the merge must decide by shape, not by name.
+"""
+import json
+
+import pytest
+
+perf = pytest.importorskip("benchmarks.perf")
+
+
+def _merge(tmp_path, section, out, existing=None):
+    path = tmp_path / "BENCH_fleet.json"
+    if existing is not None:
+        path.write_text(json.dumps(existing))
+    perf._write_fleet_bench(section, out, path=path)
+    return json.loads(path.read_text())
+
+
+def test_matrix_only_file_survives_remerge(tmp_path):
+    matrix = {"horizon_h": 24, "cells": []}
+    data = _merge(tmp_path, "fleet_loop", {"jobs": 1},
+                  existing={"fleet_matrix": matrix})
+    assert data == {"fleet_matrix": matrix, "fleet_loop": {"jobs": 1}}
+
+
+def test_unknown_future_section_survives(tmp_path):
+    data = _merge(tmp_path, "fleet_matrix", {"cells": []},
+                  existing={"fleet_2027_bench": {"x": 1}})
+    assert data["fleet_2027_bench"] == {"x": 1}
+    assert data["fleet_matrix"] == {"cells": []}
+
+
+def test_old_flat_layout_still_migrates(tmp_path):
+    # pre-section files had scalar fields at the top level: start over
+    data = _merge(tmp_path, "fleet_loop", {"jobs": 1},
+                  existing={"jobs_per_s": 105.6, "completed": 400})
+    assert data == {"fleet_loop": {"jobs": 1}}
+
+
+def test_corrupt_and_missing_files(tmp_path):
+    path = tmp_path / "BENCH_fleet.json"
+    path.write_text("{not json")
+    perf._write_fleet_bench("fleet_loop", {"jobs": 1}, path=path)
+    assert json.loads(path.read_text()) == {"fleet_loop": {"jobs": 1}}
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    data = _merge(fresh, "fleet_matrix", {"cells": []})
+    assert data == {"fleet_matrix": {"cells": []}}
+
+
+def test_matrix_default_horizon_is_full_day(monkeypatch):
+    import inspect
+    src = inspect.getsource(perf.fleet_matrix)
+    assert "BENCH_MATRIX_HORIZON_H\", \"24\"" in src
+
+
+def test_field_lattice_registered():
+    from benchmarks.run import _registry
+    assert "field_lattice" in {name for name, _ in _registry()}

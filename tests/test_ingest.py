@@ -1,0 +1,144 @@
+"""Trace-ingestion edge cases: every malformed-CSV shape is rejected (or
+gap-filled) deterministically, and the checked-in golden fixture stays
+bit-identical to its generator.
+"""
+import datetime as dt
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.carbon import ingest
+from repro.core.carbon.field import CarbonField
+from repro.core.carbon.ingest import IngestError
+from repro.core.carbon.intensity import PAPER_WINDOW_T0
+
+DATA = pathlib.Path(__file__).parent / "data"
+T0 = int(PAPER_WINDOW_T0)
+
+
+def _stamp(h, *, offset="+00:00"):
+    t = dt.datetime.fromtimestamp(T0 + 3600 * h, tz=dt.timezone.utc)
+    if offset == "+00:00":
+        return t.isoformat()
+    sign = 1 if offset[0] == "+" else -1
+    hh, mm = int(offset[1:3]), int(offset[4:6])
+    tz = dt.timezone(sign * dt.timedelta(hours=hh, minutes=mm))
+    return t.astimezone(tz).isoformat()
+
+
+def _csv(rows):
+    return ingest.CSV_HEADER + "\n" + "\n".join(rows) + "\n"
+
+
+# --- rejection cases ---------------------------------------------------------
+def test_empty_and_bad_header_rejected():
+    with pytest.raises(IngestError, match="empty"):
+        ingest.parse_csv("")
+    with pytest.raises(IngestError, match="bad header"):
+        ingest.parse_csv("time,region,ci\n2022-07-01T00:00:00+00:00,Z,100\n")
+
+
+def test_header_aliases_accepted():
+    text = "timestamp,zone_id,carbon_intensity_avg\n" \
+        f"{_stamp(0)},Z,100.0\n"
+    traces = ingest.parse_csv(text)
+    assert traces["Z"].values.tolist() == [100.0]
+
+
+def test_wrong_field_count_rejected():
+    with pytest.raises(IngestError, match="line 2: expected 3 fields"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z"]))
+
+
+def test_bad_timestamp_and_value_rejected():
+    with pytest.raises(IngestError, match="line 2: bad timestamp"):
+        ingest.parse_csv(_csv(["yesterday,Z,100"]))
+    with pytest.raises(IngestError, match="line 2: bad value"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z,n/a"]))
+    with pytest.raises(IngestError, match="outside"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z,-5.0"]))
+    with pytest.raises(IngestError, match="outside"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z,nan"]))
+    with pytest.raises(IngestError, match="outside"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z,90000"]))
+
+
+def test_non_monotone_rows_rejected():
+    with pytest.raises(IngestError, match="non-monotone.*'Z'"):
+        ingest.parse_csv(_csv([f"{_stamp(2)},Z,100", f"{_stamp(1)},Z,110"]))
+    # monotone per zone is enough: interleaved zones are fine
+    traces = ingest.parse_csv(_csv([
+        f"{_stamp(0)},A,100", f"{_stamp(0)},B,200",
+        f"{_stamp(1)},A,110", f"{_stamp(1)},B,210"]))
+    assert traces["A"].values.tolist() == [100.0, 110.0]
+    assert traces["B"].values.tolist() == [200.0, 210.0]
+
+
+def test_duplicate_timestamps():
+    # identical duplicates collapse…
+    traces = ingest.parse_csv(_csv(
+        [f"{_stamp(0)},Z,100", f"{_stamp(0)},Z,100", f"{_stamp(1)},Z,120"]))
+    assert traces["Z"].values.tolist() == [100.0, 120.0]
+    # …conflicting ones raise
+    with pytest.raises(IngestError, match="conflicting duplicate"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z,100", f"{_stamp(0)},Z,101"]))
+
+
+def test_long_gap_rejected_short_gap_filled():
+    with pytest.raises(IngestError, match="7h gap"):
+        ingest.parse_csv(_csv([f"{_stamp(0)},Z,100", f"{_stamp(8)},Z,180"]))
+    # a 3h interior gap linearly interpolates, deterministically
+    traces = ingest.parse_csv(_csv(
+        [f"{_stamp(0)},Z,100", f"{_stamp(4)},Z,140"]))
+    tr = traces["Z"]
+    assert tr.values.tolist() == [100.0, 110.0, 120.0, 130.0, 140.0]
+    assert tr.filled == (1, 2, 3)
+    # tighter policy rejects the same gap
+    with pytest.raises(IngestError, match="3h gap"):
+        ingest.parse_csv(_csv(
+            [f"{_stamp(0)},Z,100", f"{_stamp(4)},Z,140"]), max_gap_h=2)
+
+
+def test_timezone_offsets_normalize_to_utc():
+    # the same instant written three ways collapses to one sample
+    traces = ingest.parse_csv(_csv([
+        f"{_stamp(0, offset='-05:00')},Z,100",
+        _stamp(0).replace("+00:00", "Z") + ",Z,100",
+        f"{_stamp(1, offset='+02:00')},Z,120"]))
+    tr = traces["Z"]
+    assert tr.hour0 == T0 // 3600
+    assert tr.values.tolist() == [100.0, 120.0]
+    # but the same wall-clock text in different offsets is different
+    # instants — out of order here, so it must reject
+    plus = _stamp(0)[:19] + "+02:00"
+    with pytest.raises(IngestError, match="non-monotone"):
+        ingest.parse_csv(_csv([_stamp(0) + ",Z,100", plus + ",Z,110"]))
+
+
+def test_subhourly_bucket_means():
+    base = dt.datetime.fromtimestamp(T0, tz=dt.timezone.utc)
+    rows = [(base + dt.timedelta(minutes=m)).isoformat() + f",Z,{v}"
+            for m, v in ((0, 100.0), (20, 110.0), (40, 90.0), (60, 200.0))]
+    traces = ingest.parse_csv(_csv(rows))
+    assert traces["Z"].values.tolist() == [100.0, 200.0]
+
+
+# --- golden fixture ----------------------------------------------------------
+def test_golden_fixture_matches_generator():
+    golden = (DATA / "lattice8_day.csv").read_text()
+    assert ingest.synthetic_lattice_csv(8, hours=24) == golden
+
+
+def test_golden_fixture_parses_and_round_trips():
+    traces = ingest.load_csv(str(DATA / "lattice8_day.csv"))
+    assert len(traces) == 8
+    assert all(tr.hours == 24 and not tr.filled for tr in traces.values())
+    f = CarbonField()
+    ingest.install_traces(traces, f)
+    assert ingest.export_csv(f, traces) == (DATA / "lattice8_day.csv").read_text()
+    # calibrated reads go through the same table (sanity: finite, >= floor)
+    tr = traces["TRC-LAT-MESO8-R00C00"]
+    ts = tr.t0 + 3600.0 * np.arange(tr.hours)
+    cal = f.zone_ci(tr.zone, ts)
+    assert np.all(np.isfinite(cal)) and np.all(cal >= 0.5)

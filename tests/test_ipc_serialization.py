@@ -226,3 +226,100 @@ def test_sla_round_trip_and_stays_frozen():
     assert _rt(sla) == sla
     with pytest.raises(dataclasses.FrozenInstanceError):
         sla.deadline_s = 1.0            # the IPC boundary never mutates
+
+
+# --- zone-lattice frozen fields ----------------------------------------------
+# Lattice zones live in runtime registries *outside* the field, so a
+# frozen snapshot additionally carries replayable setup steps
+# (FrozenField.setup); a spawn worker — fresh interpreter, nothing
+# inherited — must replay them before restoring the caches or every
+# lattice lookup dies on an unknown zone.
+def test_frozen_200_zone_lattice_field_is_bit_identical():
+    from repro.core.carbon import lattice
+
+    lat = lattice.default_lattice(200)
+    f = CarbonField()
+    ts = T0 + 3600.0 * np.arange(24)
+    want = f.ci(lat.zones, ts)               # warm all 200 zones
+    frozen = _rt(f.freeze())
+    assert ("repro.core.carbon.lattice:install_spec", (lat.spec,)) \
+        in frozen.setup
+    g = frozen.thaw()
+    got = g.ci(lat.zones, ts)
+    assert got.tolist() == want.tolist()     # bit-identical, all zones
+    # and per-zone reads hit the same snapshot
+    z = lat.zones[137]
+    assert g.zone_ci(z, ts).tolist() == f.zone_ci(z, ts).tolist()
+
+
+def _spawn_check(code):
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc
+
+
+def test_spawned_worker_replays_lattice_setup(tmp_path):
+    """A fresh interpreter thawing the snapshot must resolve lattice
+    zones, endpoints and routes purely from the replayed setup — and
+    read back the coordinator's values bit-identically."""
+    from repro.core.carbon import lattice
+
+    lat = lattice.default_lattice(200)
+    f = CarbonField()
+    ts = T0 + 3600.0 * np.arange(12)
+    z = lat.zones[42]
+    want = f.zone_ci(z, ts)
+    snap = tmp_path / "frozen.pkl"
+    snap.write_bytes(pickle.dumps(f.freeze()))
+    out = tmp_path / "vals.npy"
+    e1, e2 = lat.endpoints("edge")[0], lat.endpoints("core")[0]
+    _spawn_check(f"""
+import pickle, numpy as np
+from repro.core.carbon import field as field_mod
+from repro.core.carbon.path import discover_path
+
+frozen = pickle.loads(open({str(snap)!r}, "rb").read())
+field_mod.install_frozen_default(frozen)     # replays lattice install
+f = field_mod.default_field()
+p = discover_path({e1!r}, {e2!r})            # route provider replayed
+assert any("LatMetro" == h.info.org for h in p.hops), p.hops
+ts = {T0!r} + 3600.0 * np.arange(12)
+np.save({str(out)!r}, f.zone_ci({z!r}, ts))
+""")
+    got = np.load(out)
+    assert got.tolist() == want.tolist()
+
+
+def test_spawned_worker_replays_trace_zone_setup(tmp_path):
+    """Ingested trace zones round-trip the spawn boundary exactly: the
+    replayed degenerate regions plus the snapshot's noise table must
+    reproduce the trace bit-for-bit in the worker."""
+    from repro.core.carbon import ingest
+
+    traces = ingest.parse_csv(ingest.synthetic_lattice_csv(8, hours=12))
+    f = CarbonField()
+    ingest.install_traces(traces, f)
+    tr = next(iter(traces.values()))
+    snap = tmp_path / "frozen.pkl"
+    snap.write_bytes(pickle.dumps(f.freeze()))
+    out = tmp_path / "vals.npy"
+    _spawn_check(f"""
+import pickle, numpy as np
+from repro.core.carbon import field as field_mod
+
+frozen = pickle.loads(open({str(snap)!r}, "rb").read())
+field_mod.install_frozen_default(frozen)     # replays trace regions
+f = field_mod.default_field()
+ts = {tr.t0!r} + 3600.0 * np.arange({tr.hours})
+np.save({str(out)!r}, f.zone_ci({tr.zone!r}, ts, calibrated=False))
+""")
+    assert np.load(out).tolist() == tr.values.tolist()

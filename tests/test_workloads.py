@@ -125,7 +125,8 @@ def test_as_stream_sorts_stably():
 
 def test_scenario_registry_materializes():
     assert set(SCENARIOS) == {"steady_poisson", "diurnal_day", "bursty_day",
-                              "heavy_tail_mix"}
+                              "heavy_tail_mix", "edge_lattice_day",
+                              "metro_space_shift"}
     for name in SCENARIOS:
         sc = get_scenario(name)
         jobs = list(sc.jobs(seed=3, t0=T0))
