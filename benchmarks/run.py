@@ -34,6 +34,7 @@ def _registry():
         ("fleet_streaming", P.fleet_streaming),
         ("fleet_matrix", P.fleet_matrix),
         ("fleet_faults", P.fleet_faults),
+        ("fleet_obs", P.fleet_obs),
         ("train_step_microbench", P.train_step_microbench),
         ("carbon_ablation", carbon_ablation),
     ]

@@ -26,6 +26,12 @@ emission-rational *cross-tier* placement (a job sourced from a different
 tier than its first replica) while the merged ledger audit still
 re-integrates exactly.
 
+Every act runs under the fleet observatory (``obs=True``) and renders its
+carbon/SLA attribution rollup — per-policy-decision and per-tier tables
+with the greedy-now counterfactual column — so this example doubles as
+the observability smoke test: act two additionally asserts the merged
+parallel span trace is bit-identical to the sequential oracle's.
+
     PYTHONPATH=src python examples/fleet_day.py
 """
 import hashlib
@@ -33,6 +39,7 @@ import time
 
 from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
 from repro.core.controlplane import ShardedFleet
+from repro.core.obs import CarbonLedgerView
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import SLA, TransferJob
 
@@ -83,7 +90,8 @@ def run_day(parallel: str = "off"):
                          migration_threshold=250.0,
                          replan_every_s=3600.0,
                          migrate_check_every_s=900.0,
-                         parallel=parallel, shard_backend="numpy")
+                         parallel=parallel, shard_backend="numpy",
+                         obs=True)
     fleet.submit_many(make_jobs())
     fleet.inject_shock(T0 + 11 * 3600.0, 6.0, duration_s=6 * 3600.0,
                        zones=SHOCK_ZONES)
@@ -125,6 +133,8 @@ def main():
     assert audit_rel < 1e-9, f"merged ledger audit off by {audit_rel:.2e}"
     print(f"\nOK: {report.n_completed} jobs closed-loop across "
           f"{N_SHARDS} shards, merged ledger audit within {audit_rel:.1e}")
+    print()
+    print(CarbonLedgerView.from_report(report).render("act one — fleet day"))
 
     # --- act two: the same day, one worker process per shard ---------------
     pfleet, preport, par_wall = run_day(parallel="auto")
@@ -138,9 +148,13 @@ def main():
     assert (preport.n_events, preport.n_steps, preport.migrations) == \
         (report.n_events, report.n_steps, report.migrations)
     assert preport.outcomes == report.outcomes
+    # the observatory keeps the same contract: worker span batches merge
+    # shard-major into the exact trace the sequential run recorded
+    assert preport.trace == report.trace
     print(f"OK: worker-per-shard merge is bit-identical to the sequential "
           f"oracle ({preport.n_completed} jobs, "
-          f"{preport.total_actual_g / 1000:.1f} kg)")
+          f"{preport.total_actual_g / 1000:.1f} kg, "
+          f"{len(preport.trace)} trace spans equal)")
 
     # --- act three: the mesoscale lattice day ------------------------------
     from repro.core.carbon import lattice
@@ -150,7 +164,7 @@ def main():
     jobs = list(sc.jobs(seed=7, t0=T0))
     lfleet = ShardedFleet(sc.ftns, n_shards=N_SHARDS,
                           migration_threshold=250.0,
-                          shard_backend="numpy")
+                          shard_backend="numpy", obs=True)
     lfleet.submit_many(jobs)
     t0 = time.perf_counter()
     lreport = lfleet.run()
@@ -175,6 +189,9 @@ def main():
           f"first replica {first} ({lattice.tier_of_endpoint(first)})")
     print(f"OK: edge_lattice_day closed-loop across {N_SHARDS} shards, "
           f"merged ledger audit within {lat_audit:.1e}")
+    print()
+    print(CarbonLedgerView.from_report(lreport)
+          .render("act three — lattice day"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Fold every BENCH_*.json section into one trajectory table — the
+generated replacement for the hand-maintained "Net bench trajectory"
+paragraph in ROADMAP.md.
+
+    PYTHONPATH=src python scripts/bench_summary.py [--dir .] [--markdown]
+
+Each bench section (``fleet_loop``, ``fleet_sharded``, ``planner_scan``,
+...) becomes one line of headline numbers, so a CI job summary (or a
+human mid-review) reads the whole perf state of the repo at a glance.
+Sections this script does not know about still appear with their first
+few scalar fields — new benches are never silently dropped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# section -> ordered (label, key) headline fields; missing keys skipped.
+_HEADLINES = {
+    "fleet_loop": (("jobs/s", "jobs_per_s"), ("events/s", "events_per_s"),
+                   ("migrations", "migrations"),
+                   ("sla_miss", "sla_misses"), ("kg", "actual_kg")),
+    "fleet_sharded": (("4sh jobs/s", "jobs_per_s"),
+                      ("vs loop", "speedup_vs_fleet_loop_x"),
+                      ("par jobs/s", "parallel.jobs_per_s"),
+                      ("par x", "parallel.parallel_speedup_x"),
+                      ("exact", "parallel.exact_merge_match")),
+    "fleet_streaming": (("jobs/s", "jobs_per_s"),
+                        ("vs batch", "vs_batch_mode_x"),
+                        ("p95 adm s", "admission_p95_s"),
+                        ("backfill", "backfill_promotions")),
+    "fleet_matrix": (("cells", "cells"), ("horizon h", "horizon_h")),
+    "fleet_faults": (("recoveries", "recoveries"),
+                     ("rec s", "recovery_latency_mean_s"),
+                     ("ckpt ovh %", "checkpoint_overhead_pct"),
+                     ("exact", "exact_match_after_faults")),
+    "fleet_obs": (("overhead %", "overhead_pct"),
+                  ("spans/job", "spans_per_job"),
+                  ("series", "metric_series"),
+                  ("saved kg", "counterfactual_saved_kg")),
+    "planner_scan": (("plan us", "plan_us"), ("speedup x", "speedup_x"),
+                     ("batch jobs/s", "batch_jobs_per_s"),
+                     ("oracle", "matches_oracle")),
+    "planner_scale": (("accelerator", "accelerator"), ("chunk", "chunk"),
+                      ("rungs", "rungs")),
+    "field_lattice": (("rungs", "rungs"),),
+}
+
+# BENCH_planner.json keeps the original scan fields at the top level;
+# group them under a synthetic section so the table stays uniform.
+_PLANNER_FLAT = ("plan_us", "reference_us", "speedup_x", "alternatives",
+                 "alternatives_per_s", "batch_jobs_per_s", "matches_oracle",
+                 "emissions_rel_err", "multi_device_count",
+                 "multi_device_gate_armed", "multi_device_note",
+                 "multi_device_sharded_us", "multi_device_single_us",
+                 "multi_device_speedup_x")
+
+
+def _get(d: dict, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def _fmt(v) -> str:
+    """Scalar values verbatim; containers collapse to their size so one
+    section can never flood the one-line table."""
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if isinstance(v, (list, tuple)):
+        return f"[{len(v)}]"
+    if isinstance(v, dict):
+        return f"{{{len(v)}}}"
+    return str(v)
+
+
+def _headline(section: str, data: dict) -> str:
+    prefs = _HEADLINES.get(section)
+    parts = []
+    if prefs:
+        for label, key in prefs:
+            v = _get(data, key)
+            if v is not None:
+                parts.append(f"{label}={_fmt(v)}")
+    if not parts:                      # unknown section: first scalars
+        for k, v in list(data.items()):
+            if isinstance(v, (int, float, str)) and len(parts) < 4:
+                parts.append(f"{k}={_fmt(v)}")
+    return "  ".join(parts) or "(empty)"
+
+
+def collect(bench_dir: pathlib.Path):
+    rows = []
+    for path in sorted(bench_dir.glob("BENCH_*.json")):
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, ValueError):
+            continue
+        if not isinstance(data, dict):
+            continue
+        flat = {k: v for k, v in data.items() if not isinstance(v, dict)}
+        if flat and path.name == "BENCH_planner.json":
+            rows.append((path.name, "planner_scan",
+                         _headline("planner_scan", flat)))
+        for section, sec in sorted(data.items()):
+            if isinstance(sec, dict):
+                rows.append((path.name, section, _headline(section, sec)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="BENCH_*.json one-line "
+                                             "trajectory table")
+    ap.add_argument("--dir", default=None,
+                    help="directory holding BENCH_*.json (default: repo "
+                         "root, one level above this script)")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavored markdown table (for "
+                         "$GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    bench_dir = pathlib.Path(args.dir) if args.dir else \
+        pathlib.Path(__file__).resolve().parent.parent
+    rows = collect(bench_dir)
+    if not rows:
+        print(f"no BENCH_*.json under {bench_dir}", file=sys.stderr)
+        return 1
+    if args.markdown:
+        print("| file | section | headline |")
+        print("|---|---|---|")
+        for f, s, h in rows:
+            print(f"| {f} | {s} | {h} |")
+        return 0
+    wf = max(len(r[0]) for r in rows)
+    ws = max(len(r[1]) for r in rows)
+    for f, s, h in rows:
+        print(f"{f.ljust(wf)}  {s.ljust(ws)}  {h}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

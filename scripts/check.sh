@@ -15,11 +15,15 @@
 # of 0.8x the co-measured sharded run, + the scenario x policy x window
 # matrix, + the fault-injection durability bench, which gates an exact
 # merge after two worker kills + a backend fault and a <= 10% checkpoint
-# overhead), refreshing BENCH_planner.json / BENCH_fleet.json, with the
-# examples/fleet_stream.py end-to-end scenario run (backfill on, merged
-# ledger audit asserted), and with the seeded fault-injection soak
-# (RUN_SOAK=1: checkpoint/kill/restore the whole coordinator twice
-# mid-run, ledger audit < 1e-9 — the nightly durability job).
+# overhead, + the fleet_obs observability bench, which co-measures an
+# instrumented vs uninstrumented fleet loop and gates the tracing +
+# metrics overhead at <= 5%), refreshing BENCH_planner.json /
+# BENCH_fleet.json and printing the scripts/bench_summary.py trajectory
+# table, with the examples/fleet_stream.py end-to-end scenario run
+# (backfill on, merged ledger audit asserted), and with the seeded
+# fault-injection soak (RUN_SOAK=1: checkpoint/kill/restore the whole
+# coordinator twice mid-run, ledger audit < 1e-9 — the nightly
+# durability job).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
@@ -44,6 +48,9 @@ if [[ "${CHECK_BENCH:-0}" == "1" ]]; then
     --only fleet_matrix
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
     --only fleet_faults
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+    --only fleet_obs
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/bench_summary.py
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/fleet_stream.py
   RUN_SOAK=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q -m soak tests/test_persistence.py

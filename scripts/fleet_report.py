@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Run a named workload scenario through an observed fleet and render the
+carbon/SLA attribution rollups — or re-render them from a saved JSONL
+trace without running anything.
+
+    PYTHONPATH=src python scripts/fleet_report.py --scenario edge_lattice_day
+    PYTHONPATH=src python scripts/fleet_report.py --trace-in run.jsonl
+
+Options:
+    --scenario NAME    workload scenario (see workloads.scenarios); default
+                       edge_lattice_day — the per-tier attribution demo
+    --seed N           scenario stream seed (default 7)
+    --jobs N           cap the arrival stream at N jobs (default: all)
+    --shards N         ShardedFleet width (default 4)
+    --trace-out PATH   also write the merged trace as JSONL spans
+    --trace-in PATH    skip the run; fold an existing JSONL trace instead
+    --metrics FORMAT   also print the metrics snapshot: "prom" or "json"
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import sys
+
+
+def _run_scenario(args):
+    from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
+    from repro.core.controlplane import ShardedFleet
+    from repro.core.workloads.scenarios import get_scenario
+
+    sc = get_scenario(args.scenario)
+    jobs = sc.jobs(seed=args.seed, t0=T0)
+    if args.jobs is not None:
+        jobs = itertools.islice(jobs, args.jobs)
+    jobs = list(jobs)
+    fleet = ShardedFleet(sc.ftns, n_shards=args.shards,
+                         migration_threshold=250.0,
+                         shard_backend="numpy", obs=True)
+    fleet.submit_many(jobs)
+    for sh in sc.shocks:
+        fleet.inject_shock(T0 + sh.t_off_s, sh.factor,
+                           duration_s=sh.duration_s, zones=sh.zones)
+    rep = fleet.run()
+    fleet.close()
+    title = (f"{args.scenario} (seed {args.seed}, {len(jobs)} jobs, "
+             f"{args.shards} shards)")
+    return rep, title
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="carbon/SLA attribution rollups for a fleet run")
+    ap.add_argument("--scenario", default="edge_lattice_day")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--trace-out", default=None)
+    ap.add_argument("--trace-in", default=None)
+    ap.add_argument("--metrics", choices=("prom", "json"), default=None)
+    args = ap.parse_args(argv)
+
+    from repro.core.obs import (CarbonLedgerView, JsonlSink, emit_all,
+                                load_jsonl, to_json, to_prometheus)
+
+    if args.trace_in is not None:
+        # install the scenario's topology (lattice zones/tiers) so the
+        # saved spans' endpoints resolve; harmless for non-lattice traces
+        try:
+            from repro.core.workloads.scenarios import get_scenario
+            get_scenario(args.scenario)
+        except Exception:
+            pass
+        spans = load_jsonl(args.trace_in)
+        view = CarbonLedgerView.from_trace(spans)
+        print(view.render(f"trace {args.trace_in} ({len(spans)} spans)"))
+        return 0
+
+    rep, title = _run_scenario(args)
+    if args.trace_out:
+        sink = JsonlSink(args.trace_out)
+        emit_all(rep.trace, sink)
+        sink.close()
+        print(f"# trace: {len(rep.trace)} spans -> {args.trace_out}",
+              file=sys.stderr)
+    print(CarbonLedgerView.from_report(rep).render(title))
+    if args.metrics and rep.metrics:
+        print()
+        print(to_prometheus(rep.metrics) if args.metrics == "prom"
+              else to_json(rep.metrics))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,10 +8,11 @@ fields and record flow match the open-source tool the paper builds on
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import time
 import uuid
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.carbon.energy import HOST_PROFILES, HostPowerModel
 
@@ -87,7 +88,8 @@ class Pmeter:
 
     def __init__(self, node_id: str, profile: str = "tpu_host",
                  interface: str = "eth0", mtu: int = 9000,
-                 zone: Optional[str] = None, field=None):
+                 zone: Optional[str] = None, field=None,
+                 clock: Optional[Callable[[], float]] = None):
         self.node_id = node_id
         self.profile: HostPowerModel = HOST_PROFILES[profile]
         self.profile_name = profile
@@ -95,6 +97,11 @@ class Pmeter:
         self.mtu = mtu
         self.zone = zone
         self._field = field
+        # time source for measure(t=None): inject the event loop's sim
+        # clock (e.g. ``lambda: ctl.events.now``) so records replay
+        # deterministically; without one, measure() falls back to wall
+        # time — the seed tool's behavior
+        self.clock = clock
         self.records: List[PmeterRecord] = []
         self._pkts_sent = 0
         self._pkts_recv = 0
@@ -124,10 +131,13 @@ class Pmeter:
         steps = np.diff(ts)
         return float((powers[:-1] * cis[:-1] * steps).sum() / 3.6e6)
 
-    def measure(self, t: float, *, cpu_util: float, mem_util: float,
+    def measure(self, t: Optional[float] = None, *, cpu_util: float,
+                mem_util: float,
                 tx_gbps: float, rx_gbps: float, rtt_src_ms: float = 0.2,
                 rtt_dst_ms: float = 20.0,
                 transfer: Optional[TransferMetrics] = None) -> PmeterRecord:
+        if t is None:
+            t = self.clock() if self.clock is not None else time.time()
         p = self.profile
         mem_total = 192 * 2**30 if p.cores >= 40 else 16 * 2**30
         used = int(mem_total * min(mem_util, 1.0))
@@ -170,5 +180,14 @@ class Pmeter:
                                     nic_gbps)
 
 
-def new_job_uuid() -> str:
-    return str(uuid.uuid4())
+def new_job_uuid(node_id: Optional[str] = None,
+                 seq: Optional[int] = None) -> str:
+    """A job UUID string. With ``(node_id, seq)`` context the UUID is
+    blake2b-derived and therefore identical under replay — the
+    determinism contract everything in this runtime keeps; without
+    context it falls back to a random ``uuid4`` (the seed behavior)."""
+    if node_id is None and seq is None:
+        return str(uuid.uuid4())
+    d = hashlib.blake2b(f"pmeter:{node_id}:{seq}".encode(),
+                        digest_size=16).digest()
+    return str(uuid.UUID(bytes=d))

@@ -76,6 +76,9 @@ from repro.core.controlplane.events import (EventLoop, ForecastShock,
                                             JobArrival, JobComplete,
                                             JobReady, MigrationCheck,
                                             ReplanTick, StepTick)
+from repro.core.obs import metrics as obs_metrics
+from repro.core.obs.observer import as_observer
+from repro.core.obs.trace import Span
 from repro.core.scheduler.overlay import (FTN, MigrationEvent,
                                           OverlayScheduler)
 from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob
@@ -183,6 +186,13 @@ class FleetReport:
     # Empty on the sequential no-fault oracle, so report equality pins
     # still hold; merged() concatenates in shard order.
     degradations: Tuple[str, ...] = ()
+    # obs-enabled runs only: the deterministic sim-clock span trace
+    # (merged shard-major, like outcomes) and the metrics-registry
+    # snapshot (merged exactly — counts add, histogram buckets add
+    # elementwise). Both empty/None with obs off, so report equality
+    # pins still hold.
+    trace: Tuple[Span, ...] = ()
+    metrics: Optional[dict] = None
 
     @classmethod
     def merged(cls, reports: Sequence["FleetReport"],
@@ -202,6 +212,8 @@ class FleetReport:
         outcomes = [o for r in reports for o in r.outcomes]
         n_completed = sum(r.n_completed for r in reports)
         wall = sum(r.wall_s for r in reports) if wall_s is None else wall_s
+        snaps = [r.metrics for r in reports
+                 if getattr(r, "metrics", None)]
         return cls(
             outcomes=outcomes,
             n_jobs=sum(r.n_jobs for r in reports),
@@ -219,7 +231,10 @@ class FleetReport:
             wall_s=wall,
             jobs_per_s=n_completed / wall if wall > 0 else 0.0,
             degradations=tuple(d for r in reports
-                               for d in getattr(r, "degradations", ())))
+                               for d in getattr(r, "degradations", ())),
+            trace=tuple(sp for r in reports
+                        for sp in getattr(r, "trace", ())),
+            metrics=obs_metrics.merged(snaps) if snaps else None)
 
     def summary(self) -> str:
         dev = (self.total_actual_g / self.total_planned_g - 1.0) * 100 \
@@ -258,11 +273,18 @@ class FleetController:
                  migration_threshold: float = 400.0,
                  hysteresis: float = 0.9,
                  drift_tol: float = 0.05,
-                 max_migrations_per_job: int = 4):
+                 max_migrations_per_job: int = 4,
+                 obs=None):
         self.field = field or default_field()
         self.ftns = list(ftns)
         self._ftn_by_name = {f.name: f for f in self.ftns}
         self.planner = planner or CarbonPlanner(self.ftns, field=self.field)
+        # observability (core.obs): spans + metrics live as plain
+        # controller state, so they checkpoint/replay and ride the worker
+        # pipe protocol for free; obs=None keeps every hot path untouched
+        self.obs = as_observer(obs)
+        if self.obs is not None:
+            self.planner.observe_with(self.obs)
         # re-plans during a shock see the drift: the planner's forecast
         # emission integral is scaled by the measured zone factors
         # (persistence nowcast over the shock window)
@@ -480,6 +502,18 @@ class FleetController:
         plan = self.queue.submit(ev.job, plan=ev.plan)
         self._records[ev.job.uuid] = _JobRecord(
             job=ev.job, plan=plan, admitted_plan=plan)
+        if self.obs is not None:
+            # the admit span carries the counterfactual anchor: greedy_g
+            # is the best feasible slot-0 cell from the admission grid
+            self.obs.span(
+                "admit", ev.t, ev.job.uuid,
+                ftn=plan.ftn, source=plan.source,
+                replica0=ev.job.replicas[0],
+                start_t=plan.start_t, submitted_t=ev.job.submitted_t,
+                planned_g=plan.predicted_emissions_g,
+                greedy_g=plan.greedy_g,
+                ci=plan.predicted_avg_ci, feasible=plan.feasible)
+            self.obs.counter("fleet_jobs_admitted_total").inc()
 
     def _on_ready(self, ev: JobReady) -> None:
         self.queue.claim(ev)
@@ -505,6 +539,13 @@ class FleetController:
         self._reroute(rec, t)
         self._active[job.uuid] = rec
         self.events.push(StepTick(t=t, job_uuid=job.uuid))
+        if self.obs is not None:
+            self.obs.span("dispatch", t, job.uuid,
+                          ftn=plan.ftn, source=plan.source,
+                          gbps=rec.base_gbps,
+                          ci=self._observed_ci(rec, t),
+                          replanned=rec.replanned)
+            self.obs.gauge("fleet_inflight").set(len(self._active))
 
     def _route_for(self, job: TransferJob, source: str,
                    ftn: Optional[FTN], relay_node: str
@@ -669,10 +710,16 @@ class FleetController:
                 M = M * self._zone_scale_rows(p, ts)
             rate += (W * M).sum(axis=0)
         g_per_s = rate / 3.6e6
-        rec.actual_g += float((g_per_s * step_s).sum())
+        seg_g = float((g_per_s * step_s).sum())
+        rec.actual_g += seg_g
         ci_led = g_per_s * 3.6e6 / np.maximum(w_tot, 1e-9)
         for t, b, ci, g in zip(ts, bytes_w, ci_led, gbps):
             rec.ledger.record(float(t), float(b), float(ci), float(g))
+        if self.obs is not None:
+            # one aggregated span per flushed step segment (per route)
+            self.obs.span("step", float(ts[-1]), rec.job.uuid,
+                          n_steps=int(len(ts)),
+                          bytes_wire=float(bytes_w[-1]), actual_g=seg_g)
 
     def _zone_scale_rows(self, path: NetworkPath,
                          ts: np.ndarray) -> np.ndarray:
@@ -723,6 +770,23 @@ class FleetController:
             self.engine.model.observe(*rec.observe_leg,
                                       rec.job.parallelism,
                                       rec.job.concurrency, achieved)
+            if self.obs is not None:
+                self.obs.span("observe", ev.t, rec.job.uuid,
+                              src=rec.observe_leg[0],
+                              dst=rec.observe_leg[1],
+                              achieved_gbps=achieved)
+        if self.obs is not None:
+            self.obs.span(
+                "complete", ev.t, rec.job.uuid,
+                planned_g=rec.plan.predicted_emissions_g,
+                actual_g=rec.actual_g, sla_miss=rec.sla_miss,
+                migrations=rec.migrations,
+                duration_s=ev.t - rec.dispatch_t,
+                ftn_sequence=rec.ftn_sequence)
+            self.obs.counter("fleet_jobs_completed_total").inc()
+            if rec.sla_miss:
+                self.obs.counter("fleet_sla_miss_total").inc()
+            self.obs.gauge("fleet_inflight").set(len(self._active))
         for hook in self.completion_hooks:
             hook(ev.t, rec.job)
 
@@ -732,6 +796,12 @@ class FleetController:
                                                 drift_tol=self.drift_tol)
             self.replan_events += 1
             self.plans_changed += changed
+            if self.obs is not None:
+                self.obs.span("plan", ev.t, cause="replan_tick",
+                              queued=len(self.queue), changed=changed)
+                self.obs.counter("fleet_replan_sweeps_total").inc()
+                self.obs.histogram("fleet_queue_depth") \
+                    .observe(len(self.queue))
         if self._outstanding > 0:
             self.events.push(ReplanTick(t=ev.t + self.replan_every_s))
         else:
@@ -745,6 +815,9 @@ class FleetController:
         hand the job to a node that multiplies energy by its slowdown). A
         hand-off must cut projected remaining gCO2 by the overlay's
         hysteresis margin and still meet the SLA deadline."""
+        if self.obs is not None:
+            self.obs.histogram("fleet_inflight_at_check") \
+                .observe(len(self._active))
         for uuid, rec in list(self._active.items()):
             if rec.current_ftn is None:
                 continue               # infeasible fallback runs direct
@@ -776,6 +849,13 @@ class FleetController:
                 t=ev.t, from_ftn=rec.current_ftn.name, to_ftn=ftn.name,
                 bytes_done=rec.state.bytes_done, ci_at_migration=ci))
             self._flush(rec)           # retire the old route's segment
+            if self.obs is not None:
+                self.obs.span("migrate", ev.t, uuid,
+                              from_ftn=rec.current_ftn.name,
+                              to_ftn=ftn.name, ci=ci,
+                              g_stay=g_stay, g_move=g_move,
+                              bytes_done=rec.state.bytes_done)
+                self.obs.counter("fleet_migrations_total").inc()
             token = rec.state.checkpoint()
             rec.migrations += 1
             self.migrations += 1
@@ -797,11 +877,18 @@ class FleetController:
 
     def _on_shock(self, ev: ForecastShock) -> None:
         self._shocks.append(ev)
+        if self.obs is not None:
+            self.obs.span("shock", ev.t, factor=ev.factor, until=ev.until,
+                          zones=ev.zones)
         # forecast drift: full re-plan of everything still queued, now
         if len(self.queue):
             changed = self.queue.replan_pending(ev.t, drift_tol=None)
             self.replan_events += 1
             self.plans_changed += changed
+            if self.obs is not None:
+                self.obs.span("plan", ev.t, cause="shock",
+                              queued=len(self.queue), changed=changed)
+                self.obs.counter("fleet_replan_sweeps_total").inc()
 
     _HANDLERS = {
         JobArrival: _on_arrival,
@@ -868,6 +955,19 @@ class FleetController:
                 sla_miss=rec.sla_miss, feasible=rec.plan.feasible))
         span = (self._t_last - self._t_first) if self._t_first is not None \
             else 0.0
+        trace: Tuple[Span, ...] = ()
+        metrics = None
+        if self.obs is not None:
+            if self.obs.registry is not None:
+                # event/step totals mirror into the registry once, here,
+                # so the pump hot loop never pays per-event instruments
+                reg = self.obs.registry
+                reg.counter("fleet_events_total").value = \
+                    float(self.n_events)
+                reg.counter("fleet_engine_steps_total").value = \
+                    float(self.n_steps)
+            trace = self.obs.trace()
+            metrics = self.obs.metrics_snapshot()
         return FleetReport(
             outcomes=outcomes, n_jobs=len(self._records),
             n_completed=n_completed, total_planned_g=total_planned,
@@ -876,4 +976,5 @@ class FleetController:
             plans_changed=self.plans_changed, sla_misses=self.sla_misses,
             n_events=self.n_events, n_steps=self.n_steps,
             sim_span_s=span, wall_s=wall_s,
-            jobs_per_s=n_completed / wall_s if wall_s > 0 else 0.0)
+            jobs_per_s=n_completed / wall_s if wall_s > 0 else 0.0,
+            trace=trace, metrics=metrics)

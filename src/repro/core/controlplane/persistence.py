@@ -139,6 +139,14 @@ def capture(fleet, *, gateway=None) -> FleetCheckpoint:
         supervision=fleet.supervision,
         controller_kw=dict(fleet._controller_kw),
     )
+    if getattr(fleet, "obs", None) is not None:
+        # coordinator observer (admission/gateway spans, fleet metrics):
+        # snapshotted as its own blob so the live fleet's post-capture
+        # spans never leak into the checkpoint. Shard observers ride the
+        # controller blobs untouched. Read back with .get() — old
+        # checkpoints simply restore with a fresh coordinator observer.
+        config["coordinator_obs"] = pickle.dumps(
+            fleet.obs, protocol=pickle.HIGHEST_PROTOCOL)
     return FleetCheckpoint(
         version=CHECKPOINT_VERSION, kind="sharded",
         shards=tuple(ShardState(blob=b) for b in blobs),
@@ -197,6 +205,12 @@ def restore(ckpt: FleetCheckpoint, *, parallel: Optional[str] = None):
         supervision=cfg.get("supervision"),
         **cfg["controller_kw"])
     fleet._shocks = list(ckpt.shocks)
+    obs_blob = cfg.get("coordinator_obs")
+    if obs_blob is not None:
+        fleet.obs = pickle.loads(obs_blob)
+        # rebind the fleet planner's instrumentation to the restored
+        # registry (the constructor wired it to the fresh one)
+        fleet.planner.observe_with(fleet.obs)
     blobs = [s.blob for s in ckpt.shards]
     if fleet._runner is not None:
         fleet._runner.preload(blobs)

@@ -49,8 +49,14 @@ from repro.core.controlplane.controller import FleetController, FleetReport
 from repro.core.controlplane.parallel import (FORK_SAFE_BACKEND, FaultPlan,
                                               ParallelShardRunner, ShardSpec,
                                               SupervisionPolicy, resolve_mode)
+from repro.core.obs import metrics as obs_metrics
+from repro.core.obs.metrics import log_bounds
+from repro.core.obs.observer import ObsConfig, as_observer
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import CarbonPlanner, TransferJob
+
+# supervisor recovery-latency histogram bounds: 1 ms .. 1000 s
+_RECOVERY_BOUNDS = log_bounds(1e-3, 1e3, per_decade=2)
 
 
 def _stable_hash(key: str) -> int:
@@ -113,6 +119,20 @@ class ShardedFleet:
         self.partition = partition
         self.ftns = list(ftns)
         self._controller_kw = dict(controller_kw)
+        # observability: each shard controller builds its *own* observer
+        # from the obs= kwarg (a shared observer instance would interleave
+        # spans in-process and diverge from the per-worker copies a
+        # parallel run pickles — breaking the off/parallel bit-identity
+        # contract), while the coordinator keeps a separate observer for
+        # fleet-level spans (admission, gateway, supervisor degradations)
+        obs_kw = controller_kw.get("obs")
+        if obs_kw is not None and not isinstance(obs_kw, (bool, ObsConfig)):
+            raise ValueError(
+                "ShardedFleet obs= must be None, a bool or an ObsConfig "
+                "(each shard builds its own observer; a shared "
+                "FleetObserver would break the off/parallel bit-identity)")
+        self.obs = as_observer(obs_kw)
+        self._obs_folded = 0           # runner recoveries folded so far
         if self.parallel != "off":
             clash = {"planner", "engine", "field"} & set(controller_kw)
             if clash:
@@ -147,6 +167,8 @@ class ShardedFleet:
         self.planner = CarbonPlanner(ftns, field=self.field,
                                      batch_backend=batch_backend)
         self.planner.emission_scale_fn = self._emission_scale
+        if self.obs is not None:
+            self.planner.observe_with(self.obs)
         self._shocks: List[tuple] = []   # (t, factor, until, zones|None)
 
     @property
@@ -199,6 +221,10 @@ class ShardedFleet:
         event seq tiebreak) is identical to a per-job submit loop."""
         jobs = list(jobs)
         plans = self.planner.plan_batch(jobs)
+        if self.obs is not None and jobs:
+            self.obs.span("plan", min(j.submitted_t for j in jobs),
+                          cause="admission", n_jobs=len(jobs),
+                          cells=self.planner.last_batch_cells)
         by_shard: List[tuple] = [([], []) for _ in self.controllers]
         for job, plan in zip(jobs, plans):
             js, ps = by_shard[self.shard_of(job)]
@@ -270,7 +296,48 @@ class ShardedFleet:
         if deg:
             rep = dataclasses.replace(
                 rep, degradations=rep.degradations + deg)
-        return rep
+        return self.attach_obs(rep)
+
+    def attach_obs(self, rep: FleetReport) -> FleetReport:
+        """Fold the coordinator's observability state into a merged
+        report: supervisor recoveries become degrade spans/metrics, then
+        coordinator spans (admission, gateway, degradations) lead and
+        shard traces follow shard-major — same stable order as
+        outcomes/degradations. Also called by the streaming gateway,
+        which builds its own merge from ``run_shards``."""
+        if self.obs is None:
+            return rep
+        self._fold_supervisor_obs()
+        snaps = [s for s in (self.obs.metrics_snapshot(), rep.metrics)
+                 if s]
+        return dataclasses.replace(
+            rep,
+            trace=self.obs.trace() + rep.trace,
+            metrics=obs_metrics.merged(snaps) if snaps else rep.metrics)
+
+    def _fold_supervisor_obs(self) -> None:
+        """Fold supervisor recovery records gathered so far into the
+        coordinator observer: one ``degrade`` span each (pinned at
+        t=-1.0 — recoveries have no sim-clock instant — so they sort
+        ahead of event spans) plus respawn/recovery-latency metrics.
+        Only the deterministic fields enter the span; the measured
+        recovery wall goes to metrics, which replay tests exclude."""
+        recs = list(getattr(self._runner, "recoveries", None) or ())
+        for r in recs[self._obs_folded:]:
+            self.obs.span("degrade", -1.0,
+                          shard=r.get("shard"),
+                          outcome=str(r.get("outcome")),
+                          reason=str(r.get("reason")),
+                          attempts=r.get("attempts"),
+                          replayed=r.get("replayed"),
+                          from_checkpoint=r.get("from_checkpoint"))
+            self.obs.counter("sup_recoveries_total",
+                             outcome=str(r.get("outcome"))).inc()
+            wall = r.get("wall_s")
+            if wall is not None:
+                self.obs.histogram("sup_recovery_wall_s",
+                                   bounds=_RECOVERY_BOUNDS).observe(wall)
+        self._obs_folded = len(recs)
 
     # --- worker lifecycle ---------------------------------------------------
     def close(self) -> None:

@@ -159,6 +159,11 @@ class StreamingGateway:
         self._consumed = 0
         self._prev_t = -float("inf")
         self._next_ckpt_t: Optional[float] = None
+        # observability: the gateway shares the fleet's observer — the
+        # coordinator's for a ShardedFleet (gateway spans lead the merged
+        # trace), the controller's own for a bare FleetController (spans
+        # interleave on the one clock). Deterministic either way.
+        self.obs = getattr(fleet, "obs", None)
         if max_inflight is not None:
             for ctl in self.controllers:
                 ctl.completion_hooks.append(self._on_complete)
@@ -259,6 +264,12 @@ class StreamingGateway:
         if deg:
             rep = dataclasses.replace(
                 rep, degradations=rep.degradations + deg)
+        # a sharded fleet folds its coordinator observer (which holds the
+        # gateway's spans) here, since this merge bypassed fleet.run();
+        # a bare controller already carried them out in its own report
+        attach = getattr(self.fleet, "attach_obs", None)
+        if attach is not None:
+            rep = attach(rep)
         return rep
 
     def _maybe_checkpoint(self, t_close: float) -> None:
@@ -301,6 +312,9 @@ class StreamingGateway:
         jobs join the deferred set (their plan is recomputed against the
         conditions at promotion time, so the admission plan is dropped)."""
         self._batch_sizes.append(len(batch))
+        if self.obs is not None:
+            self.obs.histogram("gw_batch_jobs").observe(float(len(batch)))
+            self.obs.counter("gw_batches_total").inc()
         plans = self.planner.plan_batch(list(batch))
         for job, plan in zip(batch, plans):
             self._arrival_t[job.uuid] = job.submitted_t
@@ -309,12 +323,20 @@ class StreamingGateway:
                 self._deferred.append(_Deferred(job=job, seq=self._seq))
                 self._seq += 1
                 self._n_deferred_total += 1
+                if self.obs is not None:
+                    self.obs.span("defer", t_close, job=job.uuid,
+                                  cause="capacity",
+                                  inflight=len(self._inflight))
+                    self.obs.counter("gw_deferrals_total").inc()
             else:
                 self._submit(job, plan, at=t_close)
 
     def _submit(self, job: TransferJob, plan: Optional[Plan],
                 at: float) -> None:
-        self._latency.append(max(0.0, at - self._arrival_t[job.uuid]))
+        lat = max(0.0, at - self._arrival_t[job.uuid])
+        self._latency.append(lat)
+        if self.obs is not None:
+            self.obs.histogram("gw_admission_latency_s").observe(lat)
         if self.max_inflight is not None:
             self._inflight.add(job.uuid)
         self.fleet.submit(job, plan=plan, at=at)
@@ -347,11 +369,13 @@ class StreamingGateway:
         ``backfill``; ``force`` lets exactly one job through a full
         capacity gate (the terminal drain's stall-breaker)."""
         while self._deferred:
+            forced = False
             if self.max_inflight is not None \
                     and len(self._inflight) >= self.max_inflight:
                 if not force:
                     return
                 force = False          # over-admit one, then gate again
+                forced = True
             idx, plan, urgent = self._select_deferred(now)
             d = self._deferred.pop(idx)
             fifo_head = all(d.seq <= o.seq for o in self._deferred) \
@@ -359,8 +383,17 @@ class StreamingGateway:
             self.n_promotions += 1
             if urgent:
                 self.n_urgent_promotions += 1
+                cause = "urgent"
             elif self.backfill and not fifo_head:
                 self.n_backfill_promotions += 1
+                cause = "backfill"
+            else:
+                cause = "fifo"
+            if self.obs is not None:
+                self.obs.span("promote", now, job=d.job.uuid, cause=cause,
+                              forced=forced,
+                              wait_s=max(0.0, now - d.job.submitted_t))
+                self.obs.counter("gw_promotions_total", cause=cause).inc()
             # the ORIGINAL job is submitted (its absolute deadline is what
             # the controller's SLA accounting reads); the plan carries the
             # rebased start decision

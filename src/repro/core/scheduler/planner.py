@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -29,9 +30,14 @@ from repro.core.carbon.field import CarbonField, default_field
 from repro.core.carbon.path import NetworkPath, discover_path
 from repro.core.carbon.score import (carbonscore, transfer_emissions_g,
                                      transfer_emissions_g_reference)
+from repro.core.obs.metrics import log_bounds
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.time_shift import expected_transfer_ci
 from repro.core.transfer.throughput import ThroughputModel
+
+# plan_batch wall-time histogram bounds: 10 µs .. 100 s (fixed so every
+# shard's buckets merge exactly)
+_WALL_BOUNDS = log_bounds(1e-5, 1e2, per_decade=2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +76,12 @@ class Plan:
     cost: float
     feasible: bool
     alternatives: int = 0
+    # counterfactual anchor for the attribution rollups (core.obs): the
+    # emissions of the greedy-now baseline — dispatch immediately on the
+    # fastest (FTN, replica) cell, no time/space deliberation. Captured
+    # only under observability (None otherwise — NaN would break the
+    # Plan equality the replay tests pin).
+    greedy_g: Optional[float] = None
 
 
 def _plan_cost(sla: SLA, emissions_g: float, finish_rel_s) -> float:
@@ -136,6 +148,20 @@ class CarbonPlanner:
         # route around it instead of re-deriving the same shocked plan
         self.emission_scale_fn: Optional[
             Callable[[NetworkPath, np.ndarray], np.ndarray]] = None
+        # observability (core.obs): with capture_greedy on, every Plan
+        # carries the greedy-now counterfactual; _metrics is the owning
+        # observer's registry for plan_batch timing — both plain data,
+        # so they pickle with the planner (registry identity with the
+        # controller's observer survives via the pickle memo)
+        self.capture_greedy = False
+        self._metrics = None
+
+    def observe_with(self, obs) -> None:
+        """Attach a :class:`~repro.core.obs.observer.FleetObserver`:
+        turns on greedy-now capture and routes plan_batch timing /
+        cell counts into its metrics registry."""
+        self.capture_greedy = True
+        self._metrics = obs.registry
 
     def __getstate__(self) -> dict:
         """Pickle support for checkpointing: the jitted jax scorer does
@@ -184,6 +210,45 @@ class CarbonPlanner:
             return np.array([self.ci_fn(path, float(t)) for t in t0s])
         return self.field.expected_transfer_ci(path, t0s, dur)
 
+    def _resolve_greedy(self, job: TransferJob,
+                        captured: Optional[float]) -> Optional[float]:
+        """The greedy-now counterfactual for a finished plan: the slot-0
+        emission of the fastest cell, read off the already-scored grid
+        (``captured``, free) when the scan produced one, else one
+        fallback integral (fused/pallas grids never materialize slot
+        values; infeasible fallbacks never scanned)."""
+        if not self.capture_greedy:
+            return None
+        return captured if captured is not None \
+            else self._greedy_now_g(job)
+
+    def _greedy_now_g(self, job: TransferJob) -> Optional[float]:
+        """The counterfactual baseline: start *now* (slot 0) on the
+        fastest (FTN, replica) cell — what a carbon-blind dispatcher
+        would do. Fallback path only (see :meth:`_resolve_greedy`): one
+        single-slot emission integral on the numpy oracle path."""
+        best = None                    # (dur, ftn, legs, gbps)
+        for ftn, src, legs, gbps, dur in self._candidates(job):
+            if gbps <= 0:
+                continue
+            if best is None or dur < best[0]:
+                best = (dur, ftn, legs, gbps)
+        if best is None:
+            return None
+        dur, ftn, legs, gbps = best
+        ts = np.array([job.submitted_t])
+        g = 0.0
+        for (a, b) in legs:
+            p = discover_path(a, b)
+            emis = self.field.transfer_emissions_g(
+                p, HOST_PROFILES["storage_frontend"], ftn.power_model,
+                job.size_bytes, ts, gbps,
+                parallelism=job.parallelism, concurrency=job.concurrency)
+            if self.emission_scale_fn is not None:
+                emis = emis * self.emission_scale_fn(p, ts)
+            g += float(np.asarray(emis).reshape(-1)[0])
+        return g
+
     def _candidates(self, job: TransferJob
                     ) -> Iterator[Tuple[FTN, str, List[Tuple[str, str]],
                                         float, float]]:
@@ -219,12 +284,18 @@ class CarbonPlanner:
         deadline_t = job.submitted_t + job.sla.deadline_s
         best: Optional[Tuple] = None   # (cost, emis, t, ftn, src, paths,
         n_alt = 0                      #  gbps, dur)
+        g0: Optional[Tuple] = None     # (dur, emis[0]): greedy-now capture
         for ftn, src, legs, gbps, dur in self._candidates(job):
             ts = self._slot_starts(job, dur, deadline_t)
             emis = np.zeros(ts.shape)
             paths = [discover_path(a, b) for (a, b) in legs]
             for p in paths:
                 emis += self._leg_emissions(p, ftn.power_model, job, ts, gbps)
+            # ts[0] is always the submission instant, so the scan already
+            # scored the carbon-blind start-now cell — keep the fastest
+            if self.capture_greedy and gbps > 0 \
+                    and (g0 is None or dur < g0[0]):
+                g0 = (dur, float(emis[0]))
             feasible = ts + dur <= deadline_t + 1e-9
             if job.sla.carbon_budget_g is not None:
                 feasible &= emis <= job.sla.carbon_budget_g
@@ -237,11 +308,13 @@ class CarbonPlanner:
                 best = (float(cost[i]), float(emis[i]), float(ts[i]),
                         ftn, src, paths, gbps, dur)
         if best is None:
-            return self._fallback(job, n_alt)
-        return self._finish_plan(job, best, n_alt)
+            return self._fallback(job, n_alt,
+                                  greedy=g0[1] if g0 else None)
+        return self._finish_plan(job, best, n_alt,
+                                 greedy=g0[1] if g0 else None)
 
     def _finish_plan(self, job: TransferJob, best: Tuple,
-                     n_alt: int) -> Plan:
+                     n_alt: int, greedy: Optional[float] = None) -> Plan:
         """Materialize the winning cell into a Plan. The avg-CI/carbonscore
         annotations never enter the cost, so they are sampled once for the
         winner here instead of for every candidate slot of the scan (~30%
@@ -257,20 +330,20 @@ class CarbonPlanner:
             predicted_duration_s=dur, predicted_emissions_g=emis_i,
             predicted_avg_ci=avg_ci,
             predicted_carbonscore=carbonscore(job.size_bytes, avg_ci, dur),
-            cost=cost_i, feasible=True, alternatives=n_alt)
+            cost=cost_i, feasible=True, alternatives=n_alt,
+            greedy_g=self._resolve_greedy(job, greedy))
 
-    def _finish_plans(self, items: Sequence[Tuple[TransferJob, Tuple, int]]
-                      ) -> List[Plan]:
+    def _finish_plans(self, items: Sequence[Tuple]) -> List[Plan]:
         """:meth:`_finish_plan` for many winners at once: the midpoint
         CI samples of every winner sharing a path evaluate in one
         ``path_ci`` call (identical floats — same per-element math and
         summation order as ``expected_transfer_ci``)."""
         if self.ci_fn is not None or len(items) < 4:
-            return [self._finish_plan(job, best, n_alt)
-                    for job, best, n_alt in items]
+            return [self._finish_plan(job, best, n_alt, greedy)
+                    for job, best, n_alt, greedy in items]
         by_path: dict = {}
         legs_n: List[List[Tuple]] = []
-        for j, (job, best, n_alt) in enumerate(items):
+        for j, (job, best, n_alt, _greedy) in enumerate(items):
             _, _, t_i, _, _, paths, _, dur = best
             row = []
             for p in paths:
@@ -288,7 +361,7 @@ class CarbonPlanner:
             vals[key] = [v[bounds[i]:bounds[i + 1]]
                          for i in range(len(chunks))]
         out = []
-        for (job, best, n_alt), row in zip(items, legs_n):
+        for (job, best, n_alt, greedy), row in zip(items, legs_n):
             cost_i, emis_i, t_i, ftn, src, paths, gbps, dur = best
             avg_ci = sum(float(vals[key][slot].sum() / n)
                          for key, slot, n in row) / len(row)
@@ -299,7 +372,8 @@ class CarbonPlanner:
                 predicted_avg_ci=avg_ci,
                 predicted_carbonscore=carbonscore(job.size_bytes, avg_ci,
                                                   dur),
-                cost=cost_i, feasible=True, alternatives=n_alt))
+                cost=cost_i, feasible=True, alternatives=n_alt,
+                greedy_g=self._resolve_greedy(job, greedy)))
         return out
 
     def plan_batch(self, jobs: Sequence[TransferJob],
@@ -322,6 +396,24 @@ class CarbonPlanner:
         re-plan of every job whose conditions changed at all — and the
         drifted jobs are themselves re-planned as one batch.
         """
+        if self._metrics is None:
+            return self._plan_batch(jobs, previous, drift_tol)
+        t0 = time.perf_counter()
+        plans = self._plan_batch(jobs, previous, drift_tol)
+        # wall time goes to metrics only, never into spans — traces stay
+        # deterministic under replay, timings do not
+        self._metrics.histogram("planner_plan_batch_wall_s",
+                                bounds=_WALL_BOUNDS) \
+            .observe(time.perf_counter() - t0)
+        self._metrics.counter("planner_plan_batches_total",
+                              backend=self.batch_backend).inc()
+        self._metrics.counter("planner_cells_scored_total").inc(
+            float(sum(p.alternatives for p in plans if p is not None)))
+        return plans
+
+    def _plan_batch(self, jobs: Sequence[TransferJob],
+                    previous: Optional[Sequence[Optional[Plan]]] = None,
+                    drift_tol: Optional[float] = None) -> List[Plan]:
         if previous is None or drift_tol is None:
             return self._plan_batch_full(list(jobs))
         jobs, previous = list(jobs), list(previous)
@@ -469,6 +561,7 @@ class CarbonPlanner:
             deadline_t = job.submitted_t + job.sla.deadline_s
             best: Optional[Tuple] = None
             n_alt = 0
+            g0: Optional[Tuple] = None   # (dur, emis[0]) greedy capture
             for idx, ftn, src, paths, gbps, dur, ts in jcells:
                 n_alt += len(ts)
                 if idx is None:
@@ -487,6 +580,13 @@ class CarbonPlanner:
                     tab = tab * np.stack(
                         [self.emission_scale_fn(p, ts) for p in paths])
                 emis = tab.sum(axis=0)
+                # slot 0 is the submission instant: the scored grid gives
+                # the carbon-blind start-now cell for free (the fused path
+                # never materializes slot values — _resolve_greedy falls
+                # back to one integral there)
+                if self.capture_greedy and gbps > 0 \
+                        and (g0 is None or dur < g0[0]):
+                    g0 = (dur, float(emis[0]))
                 feasible = ts + dur <= deadline_t + 1e-9
                 if job.sla.carbon_budget_g is not None:
                     feasible &= emis <= job.sla.carbon_budget_g
@@ -498,9 +598,11 @@ class CarbonPlanner:
                     best = (float(cost[i]), float(emis[i]), float(ts[i]),
                             ftn, src, paths, gbps, dur)
             if best is None:
-                plans.append(self._fallback(job, n_alt))
+                plans.append(self._fallback(job, n_alt,
+                                            greedy=g0[1] if g0 else None))
             else:
-                winners.append((len(plans), (job, best, n_alt)))
+                winners.append((len(plans),
+                                (job, best, n_alt, g0[1] if g0 else None)))
                 plans.append(None)     # filled by the batched finisher
         for (slot, _), plan in zip(winners,
                                    self._finish_plans([w for _, w
@@ -661,7 +763,8 @@ class CarbonPlanner:
         return dataclasses.replace(best, alternatives=n_alt)
 
     def _fallback(self, job: TransferJob, n_alt: int, *,
-                  reference: bool = False) -> Plan:
+                  reference: bool = False,
+                  greedy: Optional[float] = None) -> Plan:
         """SLA-infeasible: start now on the best-throughput direct path.
         The receiver power model is derived from the actual destination
         endpoint (the seed hard-coded the TPU-host profile)."""
@@ -680,4 +783,6 @@ class CarbonPlanner:
         return Plan(job.uuid, job.submitted_t, src, job.dst, p, gbps,
                     dur, emis, ci,
                     carbonscore(job.size_bytes, ci, dur),
-                    cost=math.inf, feasible=False, alternatives=n_alt)
+                    cost=math.inf, feasible=False, alternatives=n_alt,
+                    greedy_g=None if reference
+                    else self._resolve_greedy(job, greedy))

@@ -1,0 +1,541 @@
+"""Fleet observatory: event-sourced tracing, the metrics registry and
+the carbon/SLA attribution rollups.
+
+The acceptance pins of this layer:
+
+* a traced parallel (fork/spawn) run merges to a span trace
+  **bit-identical** to the sequential oracle's (coordinator spans first,
+  then shard spans shard-major — the ``outcomes`` rule);
+* crash-kill-resume reproduces the **identical trace suffix** (and, the
+  observer being checkpointed state, the identical full trace);
+* metrics snapshots merge **exactly** across shards — counters/gauges
+  add, histogram buckets add elementwise on bit-identical log bounds
+  (property-tested);
+* observability is pay-for-what-you-use: an obs-on run reports the same
+  simulation as an obs-off run (only ``trace``/``metrics`` differ);
+* ``FleetReport.degradations`` merge shard-major and stable.
+"""
+import dataclasses
+import multiprocessing as mp
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from _hyp import given, hst, settings
+from repro.core.carbon.intensity import PAPER_WINDOW_T0
+from repro.core.carbon.telemetry import Pmeter, new_job_uuid
+from repro.core.controlplane import (FaultAction, FaultPlan, FleetController,
+                                     ShardedFleet, StreamingGateway,
+                                     SupervisionPolicy, persistence)
+from repro.core.controlplane.controller import FleetReport
+from repro.core.obs import (CarbonLedgerView, FleetObserver, JsonlSink,
+                            MetricsRegistry, ObsConfig, RingSink, Span,
+                            TraceSink, as_observer, emit_all, load_jsonl,
+                            log_bounds, merged, observe_pmeter,
+                            to_json, to_prometheus)
+from repro.core.obs.metrics import NULL_INSTRUMENT
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.planner import SLA, TransferJob
+
+T0 = PAPER_WINDOW_T0
+INF = float("inf")
+FTNS = [FTN("uc", "skylake", 10.0), FTN("m1", "apple_m1", 1.2),
+        FTN("site_qc", "cascade_lake", 40.0),
+        FTN("tacc", "cascade_lake", 10.0)]
+
+HAVE_FORK = "fork" in mp.get_all_start_methods()
+MODE = "fork" if HAVE_FORK else "spawn"
+
+
+def _jobs(n=18, spread_s=1200.0):
+    return [TransferJob(f"o{i}", (300 + 53 * i % 1500) * 1e9,
+                        ("uc", "site_ne") if i % 2 else ("uc",), "tacc",
+                        SLA(deadline_s=(8 + i % 6) * 3600.0),
+                        T0 + i * spread_s) for i in range(n)]
+
+
+def _fleet(parallel, **kw):
+    """Both sides of every bit-identity pin run the numpy batch backend:
+    the greedy-now counterfactual is captured from the scoring grid, so
+    the admit spans' ``greedy_g`` is backend-dependent — pinning the
+    backend keeps off vs fork/spawn comparable (fork forces numpy in the
+    workers anyway)."""
+    kw.setdefault("batch_backend", "numpy")
+    kw.setdefault("shard_backend", "numpy")
+    kw.setdefault("obs", True)
+    return ShardedFleet(FTNS, n_shards=3, migration_threshold=250.0,
+                        parallel=parallel, **kw)
+
+
+def _run(fleet, jobs):
+    fleet.submit_many(jobs)
+    fleet.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                       zones=("CA-QC", "US-NY-NYIS"))
+    rep = fleet.run()
+    fleet.close()
+    return rep
+
+
+def _assert_identical(a, b, *, ignore=("wall_s", "jobs_per_s", "metrics")):
+    """Bit-identical FleetReports. ``metrics`` joins the wall-clock
+    ignore set: the registry holds measured wall timings (plan_batch
+    wall, recovery latency) that legitimately differ between runs."""
+    for f in dataclasses.fields(a):
+        if f.name in ignore:
+            continue
+        assert getattr(a, f.name) == getattr(b, f.name), f.name
+
+
+def _no_wall(snap):
+    """A metrics snapshot minus the wall-clock series — everything that
+    remains is sim-deterministic and must merge bit-identically."""
+    return {kind: [e for e in snap.get(kind, ()) if "wall" not in e["name"]]
+            for kind in ("counters", "gauges", "histograms")}
+
+
+def _mk_ctl(obs=True):
+    ctl = FleetController(FTNS, migration_threshold=250.0, obs=obs)
+    for job in _jobs(12):
+        ctl.submit(job)
+    ctl.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                     zones=("CA-QC", "US-NY-NYIS"))
+    return ctl
+
+
+# --- acceptance pin 1: parallel trace == sequential oracle trace -------------
+def test_traced_parallel_merge_is_bit_identical_to_sequential_oracle():
+    """The merged parallel trace must equal the sequential oracle's span
+    for span under ``==`` — same sim timestamps, same seq tiebreakers,
+    same attrs (including the greedy-now counterfactual) — and every
+    sim-deterministic metric series must merge to the same numbers."""
+    jobs = _jobs()
+    seq = _run(_fleet("off"), jobs)
+    par = _run(_fleet(MODE), jobs)
+
+    assert len(seq.trace) > 0
+    assert seq.trace == par.trace
+    _assert_identical(seq, par)
+
+    kinds = {sp.kind for sp in seq.trace}
+    for expected in ("admit", "plan", "dispatch", "step", "observe",
+                     "complete", "shock"):
+        assert expected in kinds, expected
+    # per-job lifecycle ordering: admit precedes dispatch precedes
+    # complete for every job, in one merged shard's subsequence
+    first = {}
+    for i, sp in enumerate(seq.trace):
+        if sp.job and (sp.job, sp.kind) not in first:
+            first[(sp.job, sp.kind)] = i
+    for job in jobs:
+        u = job.uuid
+        assert first[(u, "admit")] < first[(u, "dispatch")] \
+            < first[(u, "complete")]
+
+    assert seq.metrics is not None and par.metrics is not None
+    assert _no_wall(seq.metrics) == _no_wall(par.metrics)
+    # and the merged counters agree with the report totals they mirror
+    counters = {(e["name"], tuple(sorted(e["labels"].items()))): e["value"]
+                for e in seq.metrics["counters"]}
+    assert counters[("fleet_jobs_admitted_total", ())] == seq.n_jobs
+    assert counters[("fleet_jobs_completed_total", ())] == seq.n_completed
+    assert counters.get(("fleet_migrations_total", ()), 0.0) \
+        == seq.migrations
+
+
+def test_obs_off_run_is_unperturbed():
+    """Pay-for-what-you-use: tracing must observe the simulation, never
+    steer it — an obs-on run and an obs-off run report identical
+    physics, and obs-off reports stay trace-free/metrics-free so the
+    pre-observatory report equality pins keep holding."""
+    jobs = _jobs(10)
+    on = _run(_fleet("off"), jobs)
+    off = _run(_fleet("off", obs=None), jobs)
+    assert off.trace == () and off.metrics is None
+    assert on.trace != ()
+    _assert_identical(on, off, ignore=("wall_s", "jobs_per_s",
+                                       "trace", "metrics"))
+
+
+# --- acceptance pin 2: crash-kill-resume trace suffix ------------------------
+def test_controller_restore_reproduces_identical_trace_suffix():
+    """Cut a traced run mid-flight, checkpoint, restore: the resumed run
+    must regenerate the exact span suffix the uninterrupted oracle
+    produced — and, the observer being checkpointed controller state,
+    the full trace matches too."""
+    oracle = _mk_ctl().run()
+    assert len(oracle.trace) > 0
+
+    for cut_h in (2.0, 4.7, 9.0):
+        ctl = _mk_ctl()
+        ctl.pump(T0 + cut_h * 3600.0, strict=True, horizon=INF)
+        n_prefix = len(ctl.obs.spans)
+        ckpt = pickle.loads(pickle.dumps(persistence.capture(ctl)))
+        rep = persistence.restore(ckpt).run()
+        _assert_identical(rep, oracle)
+        assert rep.trace == oracle.trace
+        # the suffix regenerated after the cut is the oracle's, exactly
+        assert n_prefix < len(oracle.trace)
+        assert rep.trace[n_prefix:] == oracle.trace[n_prefix:]
+
+
+def test_sharded_restore_reproduces_identical_trace(tmp_path):
+    """The sharded flavor, across execution modes: cut under worker
+    processes, restore under 'off' AND back under workers — both resumed
+    traces equal the sequential oracle's, coordinator observer included
+    (it persists as its own checkpoint blob)."""
+    jobs = _jobs(12)
+    oracle = _run(_fleet("off"), jobs)
+
+    fleet = _fleet(MODE)
+    fleet.submit_many(jobs)
+    fleet.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                       zones=("CA-QC", "US-NY-NYIS"))
+    fleet.pump_all(T0 + 4 * 3600.0, strict=True, horizon=INF)
+    ckpt = pickle.loads(pickle.dumps(persistence.capture(fleet)))
+    fleet.close()
+
+    rep_off = persistence.restore(ckpt, parallel="off").run()
+    _assert_identical(rep_off, oracle)
+    assert rep_off.trace == oracle.trace
+
+    with persistence.restore(ckpt, parallel=MODE) as fleet2:
+        rep_par = fleet2.run()
+    _assert_identical(rep_par, oracle)
+    assert rep_par.trace == oracle.trace
+
+
+_CHILD = """
+import os, sys
+from repro.core.carbon.intensity import PAPER_WINDOW_T0 as T0
+from repro.core.controlplane import FleetController, persistence
+from repro.core.scheduler.overlay import FTN
+from repro.core.scheduler.planner import SLA, TransferJob
+
+FTNS = [FTN("uc", "skylake", 10.0), FTN("m1", "apple_m1", 1.2),
+        FTN("site_qc", "cascade_lake", 40.0),
+        FTN("tacc", "cascade_lake", 10.0)]
+ctl = FleetController(FTNS, migration_threshold=250.0, obs=True)
+for i in range(12):
+    ctl.submit(TransferJob(f"o{i}", (300 + 53 * i % 1500) * 1e9,
+                           ("uc", "site_ne") if i % 2 else ("uc",), "tacc",
+                           SLA(deadline_s=(8 + i % 6) * 3600.0),
+                           T0 + i * 1200.0))
+ctl.inject_shock(T0 + 5 * 3600.0, 6.0, duration_s=5 * 3600.0,
+                 zones=("CA-QC", "US-NY-NYIS"))
+ctl.pump(T0 + 4.0 * 3600.0, strict=True, horizon=float("inf"))
+persistence.save(persistence.capture(ctl), sys.argv[1])
+os._exit(17)  # hard kill: no atexit, no cleanup, nothing flushed
+"""
+
+
+def test_trace_survives_a_hard_process_kill(tmp_path):
+    """End-to-end crash story for the trace: a child checkpoints a
+    traced run to disk and dies via os._exit; the parent restores and
+    finishes — the resumed trace equals the never-killed oracle's."""
+    oracle = _mk_ctl().run()
+    script = tmp_path / "child.py"
+    script.write_text(textwrap.dedent(_CHILD))
+    ckpt_path = tmp_path / "fleet.ckpt"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"),
+            env.get("PYTHONPATH")) if p)
+    proc = subprocess.run([sys.executable, str(script), str(ckpt_path)],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert proc.returncode == 17, proc.stderr
+    rep = persistence.restore(persistence.load(ckpt_path)).run()
+    _assert_identical(rep, oracle)
+    assert rep.trace == oracle.trace
+
+
+# --- acceptance pin 3: exact cross-shard metrics merge (property) ------------
+@settings(max_examples=25, deadline=None)
+@given(shards=hst.lists(
+    hst.lists(hst.integers(min_value=0, max_value=10**6), max_size=30),
+    min_size=1, max_size=5))
+def test_metrics_merge_is_exact_and_associative(shards):
+    """Counters and histograms merged from per-shard snapshots must equal
+    the one-registry-saw-everything snapshot under ``==`` — integer
+    counts exactly, and (integer-valued observations keeping float adds
+    exact) sums exactly. And a merge of merges equals the flat merge."""
+    whole = MetricsRegistry()
+    snaps = []
+    for vals in shards:
+        reg = MetricsRegistry()
+        for v in vals:
+            for r in (reg, whole):
+                r.counter("jobs_total").inc()
+                r.counter("bytes_total", node="a").inc(float(v))
+                r.histogram("depth").observe(float(v))
+        snaps.append(reg.snapshot())
+    flat = merged(snaps)
+    assert flat == merged([whole.snapshot()])
+    k = len(snaps) // 2
+    assert merged([merged(snaps[:k]), merged(snaps[k:])]) == flat
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=hst.lists(hst.integers(min_value=-1000, max_value=1000),
+                      min_size=1, max_size=6))
+def test_gauge_merge_sums_per_shard_values(vals):
+    """Merged gauges sum — per-shard queue depths and inflight counts
+    add up to the fleet-wide figure."""
+    snaps = []
+    for v in vals:
+        reg = MetricsRegistry()
+        reg.gauge("fleet_inflight").set(float(v))
+        snaps.append(reg.snapshot())
+    m = merged(snaps)
+    assert m["gauges"] == [{"name": "fleet_inflight", "labels": {},
+                            "value": float(sum(vals))}]
+
+
+def test_log_bounds_are_bit_identical_and_guarded():
+    """Bounds derive from integer decade exponents, so every process
+    computes the identical float tuple — the precondition for exact
+    histogram merges; mismatched bounds must refuse, not corrupt."""
+    assert log_bounds(1e-3, 1e3, per_decade=3) \
+        == log_bounds(1e-3, 1e3, per_decade=3)
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("h", bounds=log_bounds(1e-3, 1e3)).observe(1.0)
+    b.histogram("h", bounds=log_bounds(1e-2, 1e2)).observe(1.0)
+    with pytest.raises(ValueError, match="mismatched bounds"):
+        merged([a.snapshot(), b.snapshot()])
+    with pytest.raises(ValueError, match="empty bounds"):
+        log_bounds(1e3, 1e-3)
+
+
+def test_histogram_quantile_and_exporters():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", bounds=log_bounds(1e-3, 1e3))
+    for v in (0.002, 0.02, 0.2, 2.0, 20.0):
+        h.observe(v)
+    assert h.n == 5
+    assert h.quantile(0.5) >= 0.02
+    assert h.quantile(1.0) >= 20.0
+    reg.counter("jobs_total", shard="0").inc(3)
+    reg.gauge("inflight").set(2.0)
+    snap = reg.snapshot()
+    prom = to_prometheus(snap)
+    assert "# TYPE jobs_total counter" in prom
+    assert 'jobs_total{shard="0"} 3' in prom
+    assert "lat_bucket" in prom and "lat_count 5" in prom
+    assert 'le="+Inf"' in prom
+    import json as _json
+    assert _json.loads(to_json(snap)) == _json.loads(
+        to_json(pickle.loads(pickle.dumps(reg)).snapshot()))
+
+
+# --- observer plumbing -------------------------------------------------------
+def test_as_observer_normalization_and_null_instruments():
+    assert as_observer(None) is None and as_observer(False) is None
+    obs = as_observer(True)
+    assert isinstance(obs, FleetObserver)
+    assert as_observer(obs) is obs
+    with pytest.raises(TypeError):
+        as_observer(object())
+
+    quiet = FleetObserver(ObsConfig(trace=False, metrics=False))
+    quiet.span("admit", 1.0, "j")
+    assert quiet.trace() == ()
+    assert quiet.counter("x") is NULL_INSTRUMENT
+    assert quiet.metrics_snapshot() is None
+    NULL_INSTRUMENT.inc()
+    NULL_INSTRUMENT.observe(1.0)
+    NULL_INSTRUMENT.set(2.0)
+    with pytest.raises(AttributeError):
+        NULL_INSTRUMENT.value = 1.0  # __slots__: cannot grow state
+
+    with pytest.raises(ValueError, match="obs="):
+        # a shared observer instance would interleave shard spans
+        # in-process and break the off/parallel bit-identity
+        ShardedFleet(FTNS, n_shards=2, obs=FleetObserver())
+
+
+def test_span_sinks_round_trip(tmp_path):
+    spans = [Span(1.0, 1, "admit", "j1",
+                  (("ci", 100.5), ("zone", "CA-QC"))),
+             Span(2.0, 2, "complete", "j1", (("actual_g", 5.0),)),
+             Span(2.0, 3, "replan", "", ())]
+    assert spans[0].attr("zone") == "CA-QC"
+    assert spans[0].attr("missing", 7) == 7
+    assert Span.from_dict(spans[0].to_dict()) == spans[0]
+
+    path = str(tmp_path / "trace.jsonl")
+    sink = JsonlSink(path)
+    ring = RingSink(capacity=2)
+    assert isinstance(sink, TraceSink) and isinstance(ring, TraceSink)
+    assert emit_all(spans, sink, ring) == 3
+    sink.close()
+    assert load_jsonl(path) == spans
+    assert ring.spans == tuple(spans[-2:])  # last-N forensics window
+    assert ring.n_emitted == 3
+    with pytest.raises(ValueError):
+        RingSink(capacity=0)
+
+
+# --- attribution rollups -----------------------------------------------------
+def test_rollup_attributes_emissions_and_counterfactual():
+    """The ledger view folded from a real traced run: per-decision rows
+    cover every completed job, actual emissions reconcile with the
+    report ledger, and the greedy-now counterfactual credits nonzero kg
+    to the planner's shifts."""
+    rep = _mk_ctl().run()
+    view = CarbonLedgerView.from_report(rep)
+    tot = view.totals()
+    assert tot["jobs"] == rep.n_completed
+    assert tot["actual_g"] == pytest.approx(rep.total_actual_g, rel=1e-9)
+    assert tot["sla_misses"] == rep.sla_misses
+    assert tot["migrations"] == rep.migrations
+    # the planner deferred work out of the dirty hours, so doing
+    # everything greedily-now would have cost strictly more
+    assert tot["greedy_g"] > tot["actual_g"]
+    assert tot["saved_g"] > 0.0
+
+    decisions = {row["key"] for row in view.by_decision()}
+    assert decisions <= {"immediate", "time_shift", "space_shift",
+                         "overlay_shift"}
+    assert "time_shift" in decisions
+    rendered = view.render("unit run")
+    assert "by policy decision" in rendered
+    assert "kg saved" in rendered
+
+    # trace round-trip: the same view folds from the bare span tuple
+    assert CarbonLedgerView.from_trace(rep.trace).totals() == tot
+
+
+def test_gateway_spans_fold_into_the_merged_trace():
+    """Streaming-gateway decisions join the trace: capacity deferrals
+    emit ``defer`` spans, promotions emit ``promote`` spans with their
+    cause, the gw_* series land in the merged metrics — and two
+    identical streamed runs trace identically."""
+    jobs = _jobs(20, spread_s=700.0)
+
+    def _stream():
+        fleet = _fleet("off")
+        gw = StreamingGateway(fleet, window_s=900.0, max_inflight=4,
+                              backfill=True)
+        rep = gw.run(iter(jobs))
+        fleet.close()
+        return rep, gw.stats()
+
+    rep, st = _stream()
+    defers = [sp for sp in rep.trace if sp.kind == "defer"]
+    promotes = [sp for sp in rep.trace if sp.kind == "promote"]
+    assert len(defers) == st.n_deferred > 0
+    assert len(promotes) == st.n_promotions > 0
+    assert all(sp.attr("cause") == "capacity" for sp in defers)
+    assert {sp.attr("cause") for sp in promotes} <= \
+        {"fifo", "backfill", "urgent"}
+    assert all(sp.attr("wait_s") >= 0.0 for sp in promotes)
+    counters = {e["name"] for e in rep.metrics["counters"]}
+    assert {"gw_deferrals_total", "gw_batches_total",
+            "gw_promotions_total"} <= counters
+    hists = {e["name"] for e in rep.metrics["histograms"]}
+    assert {"gw_admission_latency_s", "gw_batch_jobs"} <= hists
+
+    rep2, _ = _stream()
+    assert rep2.trace == rep.trace
+
+
+# --- degradations: shard-major, stable (satellite) ---------------------------
+def _rep(degradations):
+    return FleetReport(
+        outcomes=(), n_jobs=0, n_completed=0, total_planned_g=0.0,
+        total_actual_g=0.0, ledger_total_g=0.0, migrations=0,
+        replan_events=0, plans_changed=0, sla_misses=0, n_events=0,
+        n_steps=0, sim_span_s=0.0, wall_s=0.0, jobs_per_s=0.0,
+        degradations=tuple(degradations))
+
+
+def test_degradations_merge_shard_major_and_associative():
+    """``FleetReport.merged`` concatenates degradation lines in shard
+    order — shard-major like outcomes and trace — and a merge of merges
+    preserves that order exactly."""
+    shards = [_rep(("s0: a", "s0: b")), _rep(("s1: a",)),
+              _rep(()), _rep(("s3: a", "s3: b"))]
+    want = ("s0: a", "s0: b", "s1: a", "s3: a", "s3: b")
+    assert FleetReport.merged(shards).degradations == want
+    two_level = FleetReport.merged(
+        [FleetReport.merged(shards[:2]), FleetReport.merged(shards[2:])])
+    assert two_level.degradations == want
+
+
+def test_degradations_are_stable_across_identical_faulted_runs():
+    """Two runs under the same deterministic fault plan must surface the
+    identical degradation tuple (same lines, same order) and identical
+    ``degrade`` spans — recovery wall time stays out of both."""
+    jobs = _jobs(10)
+    plan = FaultPlan(actions=(
+        FaultAction(quantum=1, shard=0, kind="kill"),
+        FaultAction(quantum=2, shard=2, kind="kill")))
+
+    def _go():
+        fleet = _fleet(MODE, supervision=SupervisionPolicy(
+            checkpoint_every=2), fault_plan=plan)
+        fleet.submit_many(jobs)
+        for k in range(1, 5):
+            fleet.pump_all(T0 + k * 2 * 3600.0, strict=True, horizon=INF)
+        rep = fleet.run()
+        fleet.close()
+        return rep
+
+    a, b = _go(), _go()
+    assert len(a.degradations) == 2
+    assert a.degradations == b.degradations
+    deg_a = [sp for sp in a.trace if sp.kind == "degrade"]
+    deg_b = [sp for sp in b.trace if sp.kind == "degrade"]
+    assert deg_a and deg_a == deg_b
+    assert [sp.attr("shard") for sp in deg_a] == [0, 2]
+    assert all(sp.attr("outcome") == "respawn" for sp in deg_a)
+
+
+# --- pmeter bridge (satellite) -----------------------------------------------
+def test_pmeter_sim_clock_injection_is_deterministic():
+    """The seed-era collector accepts the event loop's clock: records
+    stamped from injected sim time replay identically, and context-keyed
+    job UUIDs are blake2b-stable."""
+    now = [T0]
+    pm = Pmeter("ftn-uc", profile="skylake", clock=lambda: now[0])
+    r0 = pm.measure(cpu_util=0.5, mem_util=0.3, tx_gbps=4.0, rx_gbps=0.1)
+    assert r0.t == T0
+    now[0] = T0 + 60.0
+    assert pm.measure(cpu_util=0.5, mem_util=0.3, tx_gbps=4.0,
+                      rx_gbps=0.1).t == T0 + 60.0
+    # an explicit timestamp still wins over the clock
+    assert pm.measure(T0 + 90.0, cpu_util=0.5, mem_util=0.3,
+                      tx_gbps=4.0, rx_gbps=0.1).t == T0 + 90.0
+
+    assert new_job_uuid("uc", 5) == new_job_uuid("uc", 5)
+    assert new_job_uuid("uc", 5) != new_job_uuid("uc", 6)
+    assert new_job_uuid("uc", 5) != new_job_uuid("m1", 5)
+    assert new_job_uuid() != new_job_uuid()  # no context: seed uuid4
+
+
+def test_pmeter_bridge_folds_records_into_the_registry():
+    pm = Pmeter("ftn-uc", profile="skylake", zone="US-NY-NYIS",
+                clock=iter(T0 + 30.0 * k for k in range(100)).__next__)
+    for k in range(6):
+        pm.measure(cpu_util=0.4, mem_util=0.2, tx_gbps=3.0, rx_gbps=0.2)
+    reg = MetricsRegistry()
+    assert observe_pmeter(pm, reg) == 6
+    snap = reg.snapshot()
+    counters = {e["name"]: e["value"] for e in snap["counters"]}
+    assert counters["pmeter_records_total"] == 6
+    assert counters["pmeter_tx_bytes_total"] == pytest.approx(
+        6 * 3.0e9 / 8.0)
+    hists = {e["name"]: e for e in snap["histograms"]}
+    assert hists["pmeter_power_w"]["n"] == 6
+    assert all(e["labels"] == {"node": "ftn-uc"}
+               for e in snap["counters"] + snap["histograms"])
+    gauges = {e["name"]: e["value"] for e in snap["gauges"]}
+    assert gauges["pmeter_emissions_g"] > 0.0
+    # incremental fold: since= skips the already-folded prefix
+    reg2 = MetricsRegistry()
+    assert observe_pmeter(pm, reg2, since=T0 + 60.0) == 3
