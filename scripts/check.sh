@@ -12,7 +12,12 @@
 # an exact-merge match always and a >= 2x throughput floor on hosts with
 # >= 4 CPUs — below that the numbers are recorded and the floor is
 # skipped — + streaming gateway, which gates a sustained-throughput floor
-# of 0.8x the co-measured sharded run, + the scenario x policy x window
+# of 0.8x the co-measured sharded run plus the pipelined-admission
+# subsection: pipeline="on" over the worker pool vs the sequential
+# pipeline="off" oracle, exact merge gated always, a >= 2x streamed-drain
+# floor armed on >= 4 effective CPUs (cgroup cpu.max quota respected),
+# overlap_fraction / admit_stall_ms recorded on every host —
+# + the scenario x policy x window
 # matrix, + the fault-injection durability bench, which gates an exact
 # merge after two worker kills + a backend fault and a <= 10% checkpoint
 # overhead, + the fleet_obs observability bench, which co-measures an

@@ -18,16 +18,16 @@ def __getattr__(name):
     if name in ("FleetController", "FleetReport", "JobOutcome"):
         from repro.core.controlplane import controller
         return getattr(controller, name)
-    if name == "ShardedFleet":
+    if name in ("ShardedFleet", "PumpQuanta", "quantum_schedule"):
         from repro.core.controlplane import sharded
-        return sharded.ShardedFleet
+        return getattr(sharded, name)
     if name in ("StreamingGateway", "GatewayStats"):
         from repro.core.controlplane import streaming
         return getattr(streaming, name)
     if name in ("ParallelShardRunner", "ShardProxy", "ShardSpec",
                 "ShardSupervisor", "SupervisionPolicy", "FaultPlan",
                 "FaultAction", "WorkerFailure", "WorkerDied",
-                "WorkerTimeout"):
+                "WorkerTimeout", "effective_cpu_count"):
         from repro.core.controlplane import parallel
         return getattr(parallel, name)
     if name in ("FleetCheckpoint", "ShardState"):
@@ -39,9 +39,10 @@ __all__ = [
     "Event", "EventLoop", "JobArrival", "JobReady", "StepTick", "ReplanTick",
     "MigrationCheck", "ForecastShock", "JobComplete",
     "FleetController", "FleetReport", "JobOutcome", "ShardedFleet",
+    "PumpQuanta", "quantum_schedule",
     "StreamingGateway", "GatewayStats",
     "ParallelShardRunner", "ShardProxy", "ShardSpec",
     "ShardSupervisor", "SupervisionPolicy", "FaultPlan", "FaultAction",
-    "WorkerFailure", "WorkerDied", "WorkerTimeout",
+    "WorkerFailure", "WorkerDied", "WorkerTimeout", "effective_cpu_count",
     "FleetCheckpoint", "ShardState",
 ]

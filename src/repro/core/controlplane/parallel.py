@@ -75,6 +75,7 @@ merge bit-identical to it.
 from __future__ import annotations
 
 import dataclasses
+import math
 import multiprocessing as mp
 import os
 import pickle
@@ -118,6 +119,38 @@ def resolve_mode(parallel: str) -> str:
     if parallel == "auto":
         return "fork" if "fork" in mp.get_all_start_methods() else "spawn"
     return parallel
+
+
+def effective_cpu_count() -> Tuple[int, str]:
+    """CPUs this process can *actually* run on, with a provenance note.
+
+    ``os.cpu_count()`` reports the host's cores, which lies in two
+    common deployment shapes: a CPU-affinity mask pins the process to a
+    subset, and a cgroup v2 ``cpu.max`` quota (the standard container CPU
+    limit) throttles it regardless of how many cores are visible. Every
+    parallelism gate in ``benchmarks/perf.py`` keys on this function —
+    min(visible, affinity, ceil(quota/period)) — and records the returned
+    note in its gate string, so a skipped floor on an oversubscribed CI
+    container is attributable from the ``BENCH_*.json`` artifact alone.
+    """
+    try:
+        visible = len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):   # pragma: no cover - non-Linux
+        visible = os.cpu_count() or 1
+    eff = max(visible, 1)
+    note = f"{eff} schedulable"
+    try:
+        with open("/sys/fs/cgroup/cpu.max") as f:
+            parts = f.read().split()
+        if parts and parts[0] != "max":
+            quota = max(int(math.ceil(int(parts[0]) / int(parts[1]))), 1)
+            note += f", cgroup cpu.max {quota}"
+            eff = min(eff, quota)
+        else:
+            note += ", no cgroup quota"
+    except (OSError, ValueError, IndexError, ZeroDivisionError):
+        note += ", no cgroup v2 cpu.max"
+    return eff, f"{eff} effective cpus ({note})"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -922,19 +955,39 @@ class ParallelShardRunner:
     # --- barriers -----------------------------------------------------------
     def pump_all(self, until: Optional[float] = None, *,
                  strict: bool = False,
-                 horizon: Optional[float] = None) -> int:
+                 horizon: Optional[float] = None,
+                 deadline_scale: float = 1.0) -> int:
         """One bounded time quantum across every shard: send the pump to
         all workers (they advance concurrently), then barrier on the
         replies in shard order and fire the shipped completion hooks
         shard-major. The quantum bound is exactly ``FleetController.pump``'s
         cut, so the monotone-clock contract holds per shard by
-        construction."""
+        construction.
+
+        ``deadline_scale`` rescales each worker's per-command hang
+        deadline for this barrier only — the adaptive pump schedule
+        (``sharded.PumpQuanta``) covers far less sim time per quantum near
+        a batch boundary, so a healthy worker replies proportionally
+        faster and a hung one should be declared proportionally sooner.
+        Coordinator-side bookkeeping only: nothing about it crosses the
+        wire, so it cannot perturb worker determinism."""
         self._apply_faults()
         for i in range(len(self.proxies)):
             self._send(i, "pump", (until, strict, horizon))
-        total = 0
-        for i in range(len(self.proxies)):
-            total += self._drain(i) or 0
+        saved: List[Tuple[_WorkerHandle, float]] = []
+        if deadline_scale != 1.0 and self._handles is not None:
+            for h in self._handles:
+                if h.timeout is not None:
+                    saved.append((h, h.timeout))
+                    # floor: even a near-empty quantum pays fixed IPC cost
+                    h.timeout = max(h.timeout * deadline_scale, 0.05)
+        try:
+            total = 0
+            for i in range(len(self.proxies)):
+                total += self._drain(i) or 0
+        finally:
+            for h, t in saved:
+                h.timeout = t
         for p in self.proxies:
             p._fire_completions()
         self._quantum += 1

@@ -158,11 +158,15 @@ def capture(fleet, *, gateway=None) -> FleetCheckpoint:
 
 
 _GW_CONFIG = ("window_s", "max_batch", "max_inflight", "backfill",
-              "urgency_margin", "backfill_lookahead", "checkpoint_every_s")
+              "urgency_margin", "backfill_lookahead", "pipeline", "quanta",
+              "frontends", "checkpoint_every_s")
 _GW_RUNTIME = ("_seq", "_latency", "_arrival_t", "_batch_sizes",
                "n_promotions", "n_backfill_promotions",
                "n_urgent_promotions", "_n_deferred_total", "_consumed",
-               "_prev_t", "_next_ckpt_t")
+               "_prev_t", "_next_ckpt_t",
+               # pipelined-admission wall occupancy: restored so a
+               # resumed run's stats() keep counting from the cut
+               "plan_wall_s", "stall_wall_s", "n_pipelined_batches")
 
 
 def _gateway_state(gw) -> Optional[Dict[str, Any]]:
@@ -244,7 +248,10 @@ def restore_gateway(ckpt: FleetCheckpoint, *,
     gw._deferred = [_Deferred(job=job, seq=seq)
                     for job, seq in state["deferred"]]
     for k in _GW_RUNTIME:
-        setattr(gw, k, state[k])
+        # a checkpoint from before a runtime field existed restores
+        # with the constructor's default for it
+        if k in state:
+            setattr(gw, k, state[k])
     # containers restored by reference from the unpickled state — rebind
     # as fresh mutables so a second restore from the same ckpt is clean
     gw._latency = list(gw._latency)

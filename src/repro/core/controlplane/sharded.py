@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import time
 from typing import Callable, List, Optional, Sequence, Union
 
@@ -62,6 +63,71 @@ _RECOVERY_BOUNDS = log_bounds(1e-3, 1e3, per_decade=2)
 def _stable_hash(key: str) -> int:
     return int.from_bytes(
         hashlib.blake2b(key.encode(), digest_size=8).digest(), "big")
+
+
+@dataclasses.dataclass(frozen=True)
+class PumpQuanta:
+    """Adaptive pump-quantum schedule for :meth:`ShardedFleet.pump_all`.
+
+    A fixed-size pump quantum wastes barriers: far from any batch close or
+    announced shock nothing interesting happens per quantum, while right
+    at a boundary a coarse quantum over-shoots the instant the driver
+    actually cares about. ``PumpQuanta`` declares a two-speed schedule —
+    ``coarse_s`` strides through idle sim time, ``fine_s`` strides inside
+    ``band_s`` of the next *boundary* (a batch close, a shock onset) — and
+    :func:`quantum_schedule` expands it into the exact ascending cut list
+    a pump loop runs.
+
+    The schedule is a pure function of ``(t0, t1, boundaries, quanta)``:
+    no wall clock, no fleet state, so two runs over the same sim inputs
+    pump through identical cuts (pinned by ``tests/test_pipeline.py``).
+    """
+    coarse_s: float = 3600.0
+    fine_s: float = 300.0
+    band_s: float = 900.0
+
+    def __post_init__(self):
+        if self.fine_s <= 0:
+            raise ValueError(f"fine_s must be > 0, got {self.fine_s}")
+        if self.coarse_s < self.fine_s:
+            raise ValueError(f"coarse_s ({self.coarse_s}) must be >= "
+                             f"fine_s ({self.fine_s})")
+        if self.band_s < 0:
+            raise ValueError(f"band_s must be >= 0, got {self.band_s}")
+
+
+def quantum_schedule(t0: float, t1: float, boundaries: Sequence[float],
+                     quanta: PumpQuanta) -> List[float]:
+    """Expand a :class:`PumpQuanta` into the ascending pump cuts covering
+    ``(t0, t1]``: each cut steps ``fine_s`` when the next boundary (any of
+    ``boundaries`` ahead of the cursor, or ``t1`` itself — the batch close
+    is always a boundary) is within ``band_s``, else ``coarse_s``, and
+    never strides *past* a boundary — the schedule lands exactly on each
+    one, which is what makes the fine band meaningful. The final cut is
+    exactly ``t1``. Degenerate spans (``t1 <= t0`` or an unbounded
+    ``t1``) collapse to ``[t1]`` — one pump, today's behavior."""
+    if not t1 > t0 or not math.isfinite(t1) or not math.isfinite(t0):
+        return [t1]
+    bounds = sorted({float(b) for b in boundaries if t0 < b < t1})
+    cuts: List[float] = []
+    t, bi = t0, 0
+    while t < t1 - 1e-9:
+        while bi < len(bounds) and bounds[bi] <= t + 1e-9:
+            bi += 1
+        nb = bounds[bi] if bi < len(bounds) else t1
+        if nb - t <= quanta.band_s + 1e-9:
+            # inside the fine band: stride fine_s, land exactly on the
+            # boundary
+            nxt = min(t + quanta.fine_s, nb, t1)
+        else:
+            # idle: stride coarse_s, but clamp at the band's edge so the
+            # approach to the boundary always runs fine
+            nxt = min(t + quanta.coarse_s, nb - quanta.band_s, t1)
+        if t1 - nxt < 1e-9:
+            nxt = t1
+        cuts.append(nxt)
+        t = nxt
+    return cuts or [t1]
 
 
 class ShardedFleet:
@@ -259,14 +325,59 @@ class ShardedFleet:
 
     def pump_all(self, until: Optional[float] = None, *,
                  strict: bool = False,
-                 horizon: Optional[float] = None) -> int:
+                 horizon: Optional[float] = None,
+                 quanta: Optional[PumpQuanta] = None,
+                 boundaries: Sequence[float] = ()) -> int:
         """One bounded time quantum across every shard (the streaming
         gateway's watermark pump): sequentially in-process, or as one
         barriered concurrent quantum over the worker pool. Returns the
-        total events processed."""
+        total events processed.
+
+        With ``quanta`` set the single quantum becomes an adaptive
+        schedule (:func:`quantum_schedule`): coarse sub-quanta while no
+        boundary is near, fine sub-quanta inside the band around the next
+        one. Boundaries are the caller's ``boundaries`` (the gateway
+        passes upcoming batch closes) plus every announced shock's onset
+        and end; the schedule starts at the earliest *due* event, so idle
+        sim spans cost one barrier, not span/coarse_s of them. Worker hang
+        deadlines rescale with each sub-quantum's share of a coarse one
+        (``ParallelShardRunner.pump_all(deadline_scale=...)``). The
+        schedule is pure sim-state arithmetic — every mode pumps through
+        identical cuts, so determinism contracts are untouched."""
+        if quanta is None or until is None or not math.isfinite(until):
+            return self._pump_quantum(until, strict=strict, horizon=horizon)
+        peeks = [t for t in (ctl.events.peek_t()
+                             for ctl in self.controllers) if t is not None]
+        if not peeks:                  # nothing due: one (empty) barrier
+            return self._pump_quantum(until, strict=strict, horizon=horizon)
+        t0 = max(min(peeks),
+                 max(ctl.events.now for ctl in self.controllers))
+        bounds = list(boundaries)
+        for t, _factor, t_end, _zones in self._shocks:
+            bounds.append(t)
+            if math.isfinite(t_end):
+                bounds.append(t_end)
+        # the step-batch clamp stays the FULL pump's (horizon defaults to
+        # the pump bound, never a sub-quantum cut) — a cut that fragmented
+        # step batches would change the event stream vs the single-quantum
+        # pump, breaking its exact-replay contract
+        eff_horizon = until if horizon is None else horizon
+        total, prev = 0, t0
+        for cut in quantum_schedule(t0, until, bounds, quanta):
+            scale = min(max((cut - prev) / quanta.coarse_s, 0.1), 1.0)
+            total += self._pump_quantum(cut, strict=strict,
+                                        horizon=eff_horizon,
+                                        deadline_scale=scale)
+            prev = cut
+        return total
+
+    def _pump_quantum(self, until: Optional[float], *, strict: bool,
+                      horizon: Optional[float],
+                      deadline_scale: float = 1.0) -> int:
         if self._runner is not None:
             return self._runner.pump_all(until, strict=strict,
-                                         horizon=horizon)
+                                         horizon=horizon,
+                                         deadline_scale=deadline_scale)
         return sum(ctl.pump(until, strict=strict, horizon=horizon)
                    for ctl in self.controllers)
 

@@ -30,7 +30,20 @@ field. The :class:`StreamingGateway` sits in front of a
   copies) and the projected-greenest job is promoted instead — unless a
   job's remaining slack has gone critical, in which case the SLA guard
   admits the most urgent job first, exactly like migration's
-  greener-but-late veto.
+  greener-but-late veto;
+* **double-buffered (pipelined) admission** — with ``pipeline="on"`` the
+  gateway plans micro-batch N+1 on a dedicated planner thread *while* the
+  workers drain toward batch N+1's close: the plan call is dispatched
+  right before the watermark pump and its result claimed right after, at
+  the batch close, exactly where the sequential path would have computed
+  it. Plans are pure functions of (job, announced shock schedule) and the
+  planner thread touches no fleet state, so ``pipeline="off"`` remains
+  the bit-identical oracle — same merge, same trace, same ledger — and
+  the only thing that moves is wall time (``overlap_fraction`` /
+  ``admit_stall_ms`` in :class:`GatewayStats`, ``gw_pipeline_*``
+  metrics). Both modes plan on the same dedicated *batch planner* (a
+  clone of the admission planner), so planner-internal cache evolution is
+  identical across modes and never interleaves with deferral re-scores.
 
 The gateway plans with a dedicated admission planner (base-capacity
 throughput model; for a :class:`ShardedFleet` the fleet-level planner,
@@ -38,17 +51,21 @@ which already prices pre-announced shocks). Admission planning is a pure
 function of the job and the announced shock schedule, which is what makes
 the watermark-time plan identical to the plan an arrival-time scan would
 have produced — the streamed == batch equivalence ``tests/test_streaming``
-pins.
+pins — and what makes the pipelined plan identical to the sequential one
+(``tests/test_pipeline.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.core.controlplane.controller import (FleetController, FleetReport)
+from repro.core.controlplane.sharded import PumpQuanta
 from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob
 
 
@@ -76,6 +93,17 @@ class GatewayStats:
     n_promotions: int
     n_backfill_promotions: int         # promotions that bypassed FIFO order
     n_urgent_promotions: int           # SLA guard overrode the green choice
+    # pipelined admission (all zero with pipeline="off"): wall-clock
+    # occupancy of the double buffer. overlap_fraction is the share of
+    # admission-planning wall time hidden behind the worker drain;
+    # admit_stall_ms is the mean residual wait at the batch close for a
+    # plan still in flight.
+    pipeline: str = "off"
+    n_pipelined_batches: int = 0
+    plan_wall_s: float = 0.0           # planner-thread wall, summed
+    stall_wall_s: float = 0.0          # coordinator claim wait, summed
+    overlap_fraction: float = 0.0
+    admit_stall_ms: float = 0.0
 
 
 class StreamingGateway:
@@ -98,6 +126,26 @@ class StreamingGateway:
     (jobs beyond the window advance into it as promotions drain it).
     ``planner`` — admission planner override; defaults to the fleet-level
     planner (``ShardedFleet.planner``) or the controller's own.
+    ``pipeline`` — ``"off"`` (sequential oracle, the default), ``"on"``
+    (double-buffered: plan micro-batch N+1 on a planner thread while the
+    workers drain toward its close), or ``"auto"`` (currently ``"on"``).
+    Bit-identical outputs either way; only wall time moves.
+    ``quanta`` — optional :class:`~repro.core.controlplane.sharded.PumpQuanta`:
+    the watermark pumps run as an adaptive quantum schedule (coarse when
+    no batch close or shock boundary is near, fine inside ``band_s`` of
+    one) instead of one monolithic quantum. Supervisor command deadlines
+    rescale with the quantum. Only meaningful for fleets exposing
+    ``pump_all`` (a :class:`ShardedFleet`); a bare controller pumps as
+    before. Outcome-neutral without capacity gating — with
+    ``max_inflight`` set, sub-quantum barriers can reorder completion
+    hooks across shards and hence change (deterministically) which job a
+    promotion picks, so the knob is opt-in and independent of
+    ``pipeline``.
+    ``frontends`` — ``"fleet"`` (one admission sweep per micro-batch, the
+    default) or ``"shard"`` (the sweep splits per target shard and plans
+    shard groups separately — per-job plans are pure, so the plans are
+    bit-identical; the split bounds any one planner call to a shard's
+    share of the batch).
     ``checkpoint_every_s`` — durable streaming: capture a
     :class:`~repro.core.controlplane.persistence.FleetCheckpoint` of the
     fleet *and* the gateway's own admission state every so many sim
@@ -113,6 +161,9 @@ class StreamingGateway:
                  urgency_margin: float = 2.0,
                  backfill_lookahead: int = 64,
                  planner: Optional[CarbonPlanner] = None,
+                 pipeline: str = "off",
+                 quanta: Optional[PumpQuanta] = None,
+                 frontends: str = "fleet",
                  checkpoint_every_s: Optional[float] = None,
                  checkpoint_fn=None):
         if window_s < 0:
@@ -128,6 +179,15 @@ class StreamingGateway:
         if checkpoint_every_s is not None and checkpoint_every_s <= 0:
             raise ValueError(f"checkpoint_every_s must be > 0 or None, "
                              f"got {checkpoint_every_s}")
+        if pipeline not in ("off", "on", "auto"):
+            raise ValueError(f"pipeline must be 'off', 'on' or 'auto', "
+                             f"got {pipeline!r}")
+        if frontends not in ("fleet", "shard"):
+            raise ValueError(f"frontends must be 'fleet' or 'shard', "
+                             f"got {frontends!r}")
+        if quanta is not None and not isinstance(quanta, PumpQuanta):
+            raise TypeError(f"quanta must be a PumpQuanta or None, "
+                            f"got {type(quanta).__name__}")
         self.fleet = fleet
         self.controllers: List[FleetController] = list(
             getattr(fleet, "controllers", None) or [fleet])
@@ -139,6 +199,22 @@ class StreamingGateway:
         self.backfill = backfill
         self.urgency_margin = urgency_margin
         self.backfill_lookahead = backfill_lookahead
+        self.pipeline = "on" if pipeline == "auto" else pipeline
+        self.quanta = quanta
+        self.frontends = frontends
+        # pipelined-admission occupancy (wall clock; metrics-only data —
+        # never spans, per the trace determinism contract)
+        self.plan_wall_s = 0.0
+        self.stall_wall_s = 0.0
+        self.n_pipelined_batches = 0
+        # the gateway plans micro-batches on a dedicated BATCH PLANNER: a
+        # clone of the admission planner sharing its field, throughput
+        # model and live shock pricing. Used in BOTH pipeline modes, so
+        # planner-internal cache evolution is identical across modes, and
+        # the pipelined planner thread never shares an instance with the
+        # deferral/backfill re-scores (which stay on self.planner, on the
+        # coordinator thread).
+        self._batch_planner = self._clone_planner(self.planner)
         self._inflight: set = set()    # gateway-admitted, not yet complete
         self._deferred: List[_Deferred] = []
         self._seq = 0
@@ -167,6 +243,30 @@ class StreamingGateway:
         if max_inflight is not None:
             for ctl in self.controllers:
                 ctl.completion_hooks.append(self._on_complete)
+
+    @staticmethod
+    def _clone_planner(src: CarbonPlanner) -> CarbonPlanner:
+        """A dedicated batch planner for micro-batch admission: a fresh
+        ``CarbonPlanner`` sharing the source's FTNs, throughput model,
+        field and live shock pricing (``emission_scale_fn`` is a bound
+        method of the fleet, so the clone prices shocks injected later
+        too). Plans are pure functions of (job, shock schedule), so clone
+        and source plan bit-identically — the clone exists to give cache
+        evolution its own instance. A planner *subclass* (custom
+        admission policy) is not cloned: the subclass's own plan_batch is
+        the policy, so the gateway shares it (the pipelined dispatch
+        still claims before any deferral re-score runs, so the instance
+        is never used from two threads at once)."""
+        if type(src) is not CarbonPlanner:
+            return src
+        clone = CarbonPlanner(src.ftns, throughput=src.throughput,
+                              slot_s=src.slot_s, ci_fn=src.ci_fn,
+                              field=src.field, backend=src.backend,
+                              batch_backend=src.batch_backend)
+        clone.emission_scale_fn = src.emission_scale_fn
+        clone.capture_greedy = src.capture_greedy
+        clone._metrics = src._metrics
+        return clone
 
     # --- the open loop ------------------------------------------------------
     def run(self, stream: Iterable[TransferJob],
@@ -205,40 +305,74 @@ class StreamingGateway:
                until: Optional[float]) -> FleetReport:
         wall0 = time.perf_counter()
         horizon = float("inf") if until is None else until
-        pending = self._pull(it)
-        while pending is not None:
-            if pending.submitted_t > horizon:
-                break
-            t_open = pending.submitted_t
-            batch = [pending]
+        # double buffer: with pipeline="on", the micro-batch plan sweep is
+        # dispatched to a single planner thread BEFORE the watermark pump
+        # and claimed right after it, at the batch close — planning
+        # overlaps the worker drain instead of serializing behind it. The
+        # pool lives for one _drive; the finally below joins the thread
+        # so no plan call ever outlives (or races) the run.
+        pool = ThreadPoolExecutor(max_workers=1,
+                                  thread_name_prefix="gw-plan") \
+            if self.pipeline == "on" else None
+        try:
             pending = self._pull(it)
-            while (pending is not None and len(batch) < self.max_batch
-                   and pending.submitted_t <= t_open + self.window_s
-                   and pending.submitted_t <= horizon):
-                batch.append(pending)
+            while pending is not None:
+                if pending.submitted_t > horizon:
+                    break
+                t_open = pending.submitted_t
+                batch = [pending]
                 pending = self._pull(it)
-            # the batch closes on its window timer — or at its last
-            # member's arrival when max_batch filled it early (the gateway
-            # has seen every member by then), and never past the run
-            # horizon (the cut flushes an open batch, exactly the
-            # visibility a terminal run(until) gives submit_many). Members
-            # are admitted AT the close (their micro-batch latency); with
-            # window_s=0 the close is the arrival instant itself and a
-            # streamed run replays a submit_many run exactly.
-            t_close = batch[-1].submitted_t if len(batch) >= self.max_batch \
-                else min(t_open + self.window_s, horizon)
-            # watermark: the clock must sit strictly below the close
-            # before the batch's JobArrivals are pushed — admission can
-            # then never violate the monotone-clock contract. Step
-            # batching clamps at the run horizon, not the watermark
-            # (a cut that fragmented step batches would change the event
-            # stream vs the batch-mode run).
-            self._pump_all(t_close, strict=True, horizon=horizon)
-            self._admit(batch, t_close)
-            # the batch is durable fleet state now — only here do its
-            # members count as consumed (resume re-pulls anything later)
-            self._consumed += len(batch)
-            self._maybe_checkpoint(t_close)
+                while (pending is not None and len(batch) < self.max_batch
+                       and pending.submitted_t <= t_open + self.window_s
+                       and pending.submitted_t <= horizon):
+                    batch.append(pending)
+                    pending = self._pull(it)
+                # the batch closes on its window timer — or at its last
+                # member's arrival when max_batch filled it early (the
+                # gateway has seen every member by then), and never past
+                # the run horizon (the cut flushes an open batch, exactly
+                # the visibility a terminal run(until) gives submit_many).
+                # Members are admitted AT the close (their micro-batch
+                # latency); with window_s=0 the close is the arrival
+                # instant itself and a streamed run replays a submit_many
+                # run exactly.
+                t_close = batch[-1].submitted_t \
+                    if len(batch) >= self.max_batch \
+                    else min(t_open + self.window_s, horizon)
+                fut: Optional[Future] = None
+                if pool is not None:
+                    fut = pool.submit(self._plan_timed, list(batch))
+                # watermark: the clock must sit strictly below the close
+                # before the batch's JobArrivals are pushed — admission
+                # can then never violate the monotone-clock contract.
+                # Step batching clamps at the run horizon, not the
+                # watermark (a cut that fragmented step batches would
+                # change the event stream vs the batch-mode run).
+                self._pump_all(t_close, strict=True, horizon=horizon,
+                               boundary=t_close)
+                plans = None
+                if fut is not None:
+                    t_claim = time.perf_counter()
+                    plans, plan_wall = fut.result()
+                    self.stall_wall_s += time.perf_counter() - t_claim
+                    self.plan_wall_s += plan_wall
+                    self.n_pipelined_batches += 1
+                    if self.obs is not None:
+                        self.obs.histogram(
+                            "gw_pipeline_plan_wall_s").observe(plan_wall)
+                        self.obs.counter("gw_pipeline_batches_total").inc()
+                self._admit(batch, t_close, plans=plans)
+                # the batch is durable fleet state now — only here do its
+                # members count as consumed (resume re-pulls anything
+                # later). The plan future was claimed above, so a capture
+                # here never races the planner thread; a crash BETWEEN
+                # dispatch and close leaves the batch unconsumed in the
+                # last checkpoint and resume() replays it exactly.
+                self._consumed += len(batch)
+                self._maybe_checkpoint(t_close)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
         # stream exhausted (or horizon cut): drain everything still queued,
         # re-draining after completion hooks promote deferred jobs
         def _due(ctl: FleetController) -> bool:
@@ -291,31 +425,71 @@ class StreamingGateway:
             self._next_ckpt_t += self.checkpoint_every_s
 
     def _pump_all(self, t: Optional[float], *, strict: bool = False,
-                  horizon: Optional[float] = None) -> None:
+                  horizon: Optional[float] = None,
+                  boundary: Optional[float] = None) -> None:
         """Advance every controller through one bounded quantum. A fleet
         that exposes ``pump_all`` (the sharded fleet) owns the sweep — in
         parallel mode that is one barriered concurrent quantum across the
         worker pool, completions re-fired shard-major, so the watermark
         rule drives all shards at once without touching any shard's
-        monotone clock."""
+        monotone clock. With ``quanta`` set, the fleet sweep runs as an
+        adaptive quantum schedule instead (fine near the batch close
+        passed as ``boundary`` and near shock onsets, coarse elsewhere)."""
         pump_all = getattr(self.fleet, "pump_all", None)
         if pump_all is not None:
-            pump_all(t, strict=strict, horizon=horizon)
+            if self.quanta is not None:
+                pump_all(t, strict=strict, horizon=horizon,
+                         quanta=self.quanta,
+                         boundaries=() if boundary is None else (boundary,))
+            else:
+                pump_all(t, strict=strict, horizon=horizon)
         else:
             for ctl in self.controllers:
                 ctl.pump(t, strict=strict, horizon=horizon)
 
+    # --- admission planning -------------------------------------------------
+    def _plan_timed(self, jobs: List[TransferJob]):
+        """Planner-thread entry: one admission sweep plus its wall time
+        (wall goes to metrics/stats only — never spans)."""
+        t0 = time.perf_counter()
+        plans = self._plan_batch(jobs)
+        return plans, time.perf_counter() - t0
+
+    def _plan_batch(self, jobs: List[TransferJob]) -> List[Plan]:
+        """One micro-batch admission sweep on the dedicated batch planner.
+        ``frontends="shard"`` splits the sweep per target shard (ascending
+        shard id, original order within a group — per-job plans are pure,
+        so the reassembled list is bit-identical to the unsplit sweep)."""
+        if self.frontends == "shard":
+            shard_of = getattr(self.fleet, "shard_of", None)
+            if shard_of is not None:
+                groups: Dict[int, List[int]] = {}
+                for i, job in enumerate(jobs):
+                    groups.setdefault(shard_of(job), []).append(i)
+                out: List[Optional[Plan]] = [None] * len(jobs)
+                for sid in sorted(groups):
+                    idxs = groups[sid]
+                    for i, plan in zip(idxs, self._batch_planner.plan_batch(
+                            [jobs[i] for i in idxs])):
+                        out[i] = plan
+                return out
+        return self._batch_planner.plan_batch(list(jobs))
+
     # --- admission ----------------------------------------------------------
-    def _admit(self, batch: Sequence[TransferJob], t_close: float) -> None:
+    def _admit(self, batch: Sequence[TransferJob], t_close: float,
+               plans: Optional[List[Plan]] = None) -> None:
         """Admit one micro-batch at its close instant: ONE plan_batch call
-        for the whole batch, then per-job capacity gating — over-capacity
-        jobs join the deferred set (their plan is recomputed against the
-        conditions at promotion time, so the admission plan is dropped)."""
+        for the whole batch (pre-computed by the planner thread when
+        pipelined — ``plans``), then per-job capacity gating —
+        over-capacity jobs join the deferred set (their plan is recomputed
+        against the conditions at promotion time, so the admission plan is
+        dropped)."""
         self._batch_sizes.append(len(batch))
         if self.obs is not None:
             self.obs.histogram("gw_batch_jobs").observe(float(len(batch)))
             self.obs.counter("gw_batches_total").inc()
-        plans = self.planner.plan_batch(list(batch))
+        if plans is None:
+            plans = self._plan_batch(list(batch))
         for job, plan in zip(batch, plans):
             self._arrival_t[job.uuid] = job.submitted_t
             if (self.max_inflight is not None
@@ -461,4 +635,14 @@ class StreamingGateway:
             n_deferred=self._n_deferred_total,
             n_promotions=self.n_promotions,
             n_backfill_promotions=self.n_backfill_promotions,
-            n_urgent_promotions=self.n_urgent_promotions)
+            n_urgent_promotions=self.n_urgent_promotions,
+            pipeline=self.pipeline,
+            n_pipelined_batches=self.n_pipelined_batches,
+            plan_wall_s=self.plan_wall_s,
+            stall_wall_s=self.stall_wall_s,
+            overlap_fraction=(
+                min(max(1.0 - self.stall_wall_s / self.plan_wall_s, 0.0),
+                    1.0) if self.plan_wall_s > 0 else 0.0),
+            admit_stall_ms=(
+                1000.0 * self.stall_wall_s / self.n_pipelined_batches
+                if self.n_pipelined_batches else 0.0))

@@ -68,6 +68,57 @@ _WINDOW_HOURS = 24 * 14                # per-anchor horizon (2 weeks)
 _GRID_BUCKET = 512                     # rate-grid length rounding
 
 
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Declared multi-chip mesh for the batched planner's cell-axis split.
+
+    ``batch_cell_emissions`` (and through it
+    ``CarbonPlanner.plan_batch_jax``) historically accepted ``shard=True``
+    — "use every visible device" — which is the right default on a
+    single-host CI runner but under-specifies a real multi-chip topology.
+    A ``MeshConfig`` *declares* the placement instead: which platform's
+    devices, how many of them, and the mesh axis name the kernel's
+    ``PartitionSpec``\\ s shard the cell axis over. ``build()`` resolves it
+    against the live process into a ``jax.sharding.Mesh``; the forced
+    host-device subprocess sweep (``benchmarks/perf.py::
+    planner_multi_device``) is the CI stand-in for genuinely distinct
+    chips.
+
+    Frozen (hashable) on purpose: the built mesh rides the jit cache as a
+    static argument, so two sweeps under the same declared mesh reuse one
+    compilation.
+    """
+    axis: str = "cells"
+    n_devices: Optional[int] = None    # None = every matching device
+    platform: Optional[str] = None     # None = the default backend's
+
+    def __post_init__(self):
+        if not self.axis:
+            raise ValueError("MeshConfig.axis must be a non-empty name")
+        if self.n_devices is not None and self.n_devices < 1:
+            raise ValueError(f"MeshConfig.n_devices must be >= 1 or None, "
+                             f"got {self.n_devices}")
+
+    def devices(self) -> list:
+        """The live devices this config selects, in jax enumeration
+        order (truncated to ``n_devices`` when set)."""
+        if not HAVE_JAX:
+            raise ImportError("MeshConfig needs jax")
+        devs = (jax.devices(self.platform) if self.platform is not None
+                else jax.devices())
+        if self.n_devices is not None:
+            devs = devs[:self.n_devices]
+        return list(devs)
+
+    def build(self) -> "jax.sharding.Mesh":
+        """Resolve into a 1-D ``jax.sharding.Mesh`` over :meth:`devices`."""
+        devs = self.devices()
+        if not devs:
+            raise ValueError(f"MeshConfig{dataclasses.astuple(self)!r} "
+                             f"matches no devices")
+        return jax.sharding.Mesh(np.array(devs), (self.axis,))
+
+
 class _PathWindow:
     """Dense, jit-ready view of one path over [t0, t0 + hours h): the zone
     window plus the per-hop sub-metering band and hourly noise that turn
@@ -223,7 +274,7 @@ def _round_up(n: int, b: int) -> int:
 def _kernel(zbase, zamp, zdip, znamp, zpeak, znoise, cal_a, cal_b,
             h_of_day0, day_frac_s, dow0, rel0a, anchor_idx, zone_idx,
             band, hnoise, path_idx, pair_idx, w_dev, n_steps, rem,
-            *, n_grid, n_slots, slot_stride, dt_s, n_dev):
+            *, n_grid, n_slots, slot_stride, dt_s, n_dev, mesh=None):
     """The one-jit fleet scorer (shapes: Z zones, W hours, N anchors,
     P paths, H hops, A (anchor, path) pairs, C cells, S slots, T=n_grid
     rate-grid steps).
@@ -286,13 +337,16 @@ def _kernel(zbase, zamp, zdip, znamp, zpeak, znoise, cal_a, cal_b,
     vcell = jax.vmap(cell, in_axes=(0, 0, 0, 0, None, None))
     if n_dev > 1:                      # optional scale-out across devices
         from repro.models.layers import shard_map_compat
-        mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]), ("cells",))
+        if mesh is None:               # undeclared: every visible device
+            mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]),
+                                     ("cells",))
+        axis = mesh.axis_names[0]
         spec = jax.sharding.PartitionSpec
         vcell = shard_map_compat(
             vcell, mesh=mesh,
-            in_specs=(spec("cells"), spec("cells"), spec("cells"),
-                      spec("cells"), spec(), spec()),
-            out_specs=spec("cells"))
+            in_specs=(spec(axis), spec(axis), spec(axis),
+                      spec(axis), spec(), spec()),
+            out_specs=spec(axis))
     return vcell(pair_idx, w_dev, n_steps, rem, prefix, ci)         # (C,2,S)
 
 
@@ -302,8 +356,10 @@ _kernel_jit = None                     # one compiled-kernel cache per process
 def _batch_kernel():
     global _kernel_jit
     if _kernel_jit is None:
+        # the mesh is static too: jax.sharding.Mesh hashes by device
+        # tuple + axis names, so same declared mesh => same compilation
         _kernel_jit = jax.jit(_kernel, static_argnames=(
-            "n_grid", "n_slots", "slot_stride", "dt_s", "n_dev"))
+            "n_grid", "n_slots", "slot_stride", "dt_s", "n_dev", "mesh"))
     return _kernel_jit
 
 
@@ -347,7 +403,7 @@ def _iter_chunks(cells: Sequence[CellTask], slot_stride: int,
 
 def batch_cell_emissions(field: CarbonField, cells: Sequence[CellTask], *,
                          dt_s: float = 60.0, slot_stride: int = 60,
-                         shard: Optional[bool] = None) -> List[np.ndarray]:
+                         shard=None) -> List[np.ndarray]:
     """Score every cell's (leg, start-slot) emission table in one jitted
     call per memory chunk. Returns, per cell, a ``(n_legs, n_slots)`` f64
     array matching ``CarbonField.transfer_emissions_g`` per leg to ~1e-7
@@ -355,20 +411,34 @@ def batch_cell_emissions(field: CarbonField, cells: Sequence[CellTask], *,
 
     ``slot_stride`` is the slot spacing in dt_s steps (the planner's
     ``slot_s / dt_s``; both legs of a cell share the slot/step layout).
-    ``shard`` forces the multi-device path on (True) or off (False); None
-    uses every visible device when there is more than one.
+    ``shard`` selects the multi-device cell-axis split: ``True`` forces
+    it on over every visible device, ``False`` forces it off, a
+    :class:`MeshConfig` shards over that declared mesh, and ``None`` uses
+    every visible device when there is more than one. A mesh (declared or
+    not) that resolves to fewer than two devices falls back to the
+    single-device path — the split is a speed knob, never a semantics
+    change.
     """
     if not HAVE_JAX:
         raise ImportError("batch_cell_emissions needs jax; use the numpy "
                           "CarbonPlanner.plan_batch oracle instead")
-    n_dev = _device_count() if shard is None or shard else 1
-    if shard and n_dev < 2:
-        n_dev = 1
+    mesh = None
+    if isinstance(shard, MeshConfig):
+        devs = shard.devices()
+        n_dev = len(devs)
+        if n_dev >= 2:
+            mesh = shard.build()
+        else:
+            n_dev = 1
+    else:
+        n_dev = _device_count() if shard is None or shard else 1
+        if shard and n_dev < 2:
+            n_dev = 1
     out: List[Optional[np.ndarray]] = [None] * len(cells)
     for chunk in _iter_chunks(cells, slot_stride, _MAX_ELEMS):
         for ci_, emis in zip(chunk, _score_chunk(
                 field, [cells[j] for j in chunk], dt_s=dt_s,
-                slot_stride=slot_stride, n_dev=n_dev)):
+                slot_stride=slot_stride, n_dev=n_dev, mesh=mesh)):
             out[ci_] = emis
     return out                         # type: ignore[return-value]
 
@@ -506,8 +576,8 @@ def _chunk_tables(field: CarbonField, cells: Sequence[CellTask], *,
 
 
 def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
-                 dt_s: float, slot_stride: int, n_dev: int
-                 ) -> List[np.ndarray]:
+                 dt_s: float, slot_stride: int, n_dev: int,
+                 mesh=None) -> List[np.ndarray]:
     # the cell axis must split evenly across devices for shard_map
     t = _chunk_tables(field, cells, dt_s=dt_s, slot_stride=slot_stride,
                       cell_bucket=math.lcm(_B_CELLS, max(n_dev, 1)))
@@ -518,7 +588,8 @@ def _score_chunk(field: CarbonField, cells: Sequence[CellTask], *,
             t.rel0a, t.anchor_idx, t.zone_idx, t.band, t.hnoise,
             t.path_idx, t.pair_idx, t.w_dev, t.n_steps, t.rem,
             n_grid=t.n_grid_pad, n_slots=t.n_slots_pad,
-            slot_stride=slot_stride, dt_s=float(dt_s), n_dev=n_dev),
+            slot_stride=slot_stride, dt_s=float(dt_s), n_dev=n_dev,
+            mesh=mesh),
             dtype=np.float64)
     return [emis[ci_, :len(c.legs), :c.n_slots]
             for ci_, c in enumerate(cells)]

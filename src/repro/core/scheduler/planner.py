@@ -454,7 +454,7 @@ class CarbonPlanner:
         return [self.plan(job) for job in jobs]
 
     def plan_batch_jax(self, jobs: Sequence[TransferJob], *,
-                       shard: Optional[bool] = None) -> List[Plan]:
+                       shard=None) -> List[Plan]:
         """One-jit fleet planning: every job's (FTN x replica x slot) grid
         is stacked into a single padded/masked cell table and scored by one
         ``jax.jit`` call per memory chunk (``grid_jax.batch_cell_emissions``
@@ -465,7 +465,11 @@ class CarbonPlanner:
         (in practice ~1e-7 — f32 CI chain, f64 time math). Jobs whose
         layout the batch kernel cannot host (non-dt-aligned slots, a rate
         grid past the per-cell cap) fall back to the numpy :meth:`plan`.
-        ``shard`` is forwarded to the kernel's device-sharding gate.
+        ``shard`` is forwarded to the kernel's device-sharding gate:
+        ``None``/``True``/``False`` as before, or a
+        :class:`~repro.core.scheduler.grid_jax.MeshConfig` declaring the
+        multi-chip mesh (platform, device count, axis name) the cell axis
+        shards over.
 
         With ``batch_backend="pallas"`` the same cell tables feed
         ``grid_pallas.batch_cell_best`` instead: the scoring chain *and*
