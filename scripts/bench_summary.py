@@ -18,9 +18,14 @@ counterpart in ``--dir`` (matched by basename, any ``.old`` infix
 stripped) and prints per-section deltas for every numeric field that
 moved >= 1% plus every *raising-floor* field. Raising-floor fields
 (``_RAISING_FLOORS``) are the higher-is-better numbers the repo
-ratchets; the command exits nonzero when any of them regressed more
-than 10% vs the prior artifact, so CI can surface a perf regression
-without a human diffing JSON.
+ratchets. Exit codes distinguish the failure modes so CI can fail on a
+real perf regression without also failing on a missing baseline:
+
+* ``0`` — deltas printed, no raising-floor field regressed > 10%;
+* ``1`` — artifacts unreadable (baseline or current file missing or
+  unparseable) — CI treats this as a warning, not a regression;
+* ``2`` — at least one raising-floor field regressed > 10% vs the
+  prior artifact — CI fails the job on this code.
 """
 from __future__ import annotations
 
@@ -44,6 +49,7 @@ _HEADLINES = {
                         ("p95 adm s", "admission_p95_s"),
                         ("backfill", "backfill_promotions"),
                         ("pipe x", "pipeline.streamed_speedup_x"),
+                        ("pipe-only x", "pipeline.pipeline_only_speedup_x"),
                         ("overlap", "pipeline.overlap_fraction"),
                         ("pipe exact", "pipeline.exact_merge_match")),
     "fleet_matrix": (("cells", "cells"), ("horizon h", "horizon_h")),
@@ -155,8 +161,9 @@ def _flatten(d: dict, prefix: str = "") -> dict:
 def delta(old_path: pathlib.Path, bench_dir: pathlib.Path,
           markdown: bool) -> int:
     """Per-section numeric deltas of a prior artifact vs its current
-    counterpart in ``bench_dir``. Returns 1 when any raising-floor field
-    regressed more than 10%, else 0."""
+    counterpart in ``bench_dir``. Returns 2 when any raising-floor field
+    regressed more than 10%, 1 when the artifacts cannot be read, else
+    0 (see the module docstring's exit-code table)."""
     new_name = old_path.name.replace(".old", "")
     new_path = bench_dir / new_name
     try:
@@ -218,7 +225,7 @@ def delta(old_path: pathlib.Path, bench_dir: pathlib.Path,
         print(f"REGRESSION: {s}.{k} fell {_num(ov)} -> {_num(nv)} "
               f"(> 10% below the prior artifact)",
               file=sys.stderr)
-    return 1 if regressions else 0
+    return 2 if regressions else 0
 
 
 def main(argv=None) -> int:
@@ -232,8 +239,9 @@ def main(argv=None) -> int:
                          "$GITHUB_STEP_SUMMARY)")
     ap.add_argument("--delta", default=None, metavar="OLD.json",
                     help="compare a prior BENCH artifact against its "
-                         "current counterpart in --dir; exit nonzero on "
-                         ">10%% regression in any raising-floor field")
+                         "current counterpart in --dir; exit 2 on >10%% "
+                         "regression in any raising-floor field, 1 when "
+                         "the artifacts cannot be read")
     args = ap.parse_args(argv)
     bench_dir = pathlib.Path(args.dir) if args.dir else \
         pathlib.Path(__file__).resolve().parent.parent

@@ -121,14 +121,62 @@ def resolve_mode(parallel: str) -> str:
     return parallel
 
 
+def _cgroup_cpu_quota(cgroup_root: str = "/sys/fs/cgroup",
+                      proc_self_cgroup: str = "/proc/self/cgroup"
+                      ) -> Optional[Tuple[int, str]]:
+    """Tightest cgroup v2 ``cpu.max`` quota binding this process, as
+    ``(ceil(quota/period), cgroup path)``; ``None`` when no quota
+    applies anywhere on the chain (or the files are absent — cgroup v1
+    hosts, non-Linux).
+
+    Reading only the cgroup-root ``cpu.max`` is not enough: a process in
+    a nested cgroup — a systemd slice (most non-containerized CI
+    runners), or a cgroup-namespaced container whose own subtree is
+    mounted below the root — usually sees ``max`` at the root while its
+    *own* cgroup (or an ancestor) carries the throttle. So resolve the
+    process's cgroup from ``/proc/self/cgroup`` (the ``0::<path>`` v2
+    entry) and read ``cpu.max`` there and at every ancestor up to the
+    root, keeping the smallest ceiling — quotas only ever tighten going
+    down the tree, but reading the whole chain is cheap and robust to a
+    looser leaf under a tighter slice. The path parameters exist for
+    tests."""
+    node = ""
+    try:
+        with open(proc_self_cgroup) as f:
+            for line in f:
+                parts = line.strip().split(":", 2)
+                if len(parts) == 3 and parts[0] == "0" and parts[1] == "":
+                    node = parts[2].strip("/")
+                    break
+    except OSError:
+        pass
+    best: Optional[Tuple[int, str]] = None
+    while True:
+        sub = f"/{node}" if node else ""
+        try:
+            with open(f"{cgroup_root}{sub}/cpu.max") as f:
+                parts = f.read().split()
+            if parts and parts[0] != "max":
+                q = max(int(math.ceil(int(parts[0]) / int(parts[1]))), 1)
+                if best is None or q < best[0]:
+                    best = (q, sub or "/")
+        except (OSError, ValueError, IndexError, ZeroDivisionError):
+            pass
+        if not node:
+            return best
+        node = node.rpartition("/")[0]
+
+
 def effective_cpu_count() -> Tuple[int, str]:
     """CPUs this process can *actually* run on, with a provenance note.
 
     ``os.cpu_count()`` reports the host's cores, which lies in two
     common deployment shapes: a CPU-affinity mask pins the process to a
     subset, and a cgroup v2 ``cpu.max`` quota (the standard container CPU
-    limit) throttles it regardless of how many cores are visible. Every
-    parallelism gate in ``benchmarks/perf.py`` keys on this function —
+    limit) throttles it regardless of how many cores are visible — on
+    the process's own cgroup or any ancestor, not just the root (see
+    :func:`_cgroup_cpu_quota`). Every parallelism gate in
+    ``benchmarks/perf.py`` keys on this function —
     min(visible, affinity, ceil(quota/period)) — and records the returned
     note in its gate string, so a skipped floor on an oversubscribed CI
     container is attributable from the ``BENCH_*.json`` artifact alone.
@@ -139,17 +187,13 @@ def effective_cpu_count() -> Tuple[int, str]:
         visible = os.cpu_count() or 1
     eff = max(visible, 1)
     note = f"{eff} schedulable"
-    try:
-        with open("/sys/fs/cgroup/cpu.max") as f:
-            parts = f.read().split()
-        if parts and parts[0] != "max":
-            quota = max(int(math.ceil(int(parts[0]) / int(parts[1]))), 1)
-            note += f", cgroup cpu.max {quota}"
-            eff = min(eff, quota)
-        else:
-            note += ", no cgroup quota"
-    except (OSError, ValueError, IndexError, ZeroDivisionError):
-        note += ", no cgroup v2 cpu.max"
+    quota = _cgroup_cpu_quota()
+    if quota is not None:
+        q, path = quota
+        note += f", cgroup cpu.max {q} at {path}"
+        eff = min(eff, q)
+    else:
+        note += ", no cgroup quota"
     return eff, f"{eff} effective cpus ({note})"
 
 

@@ -41,9 +41,20 @@ field. The :class:`StreamingGateway` sits in front of a
   the bit-identical oracle — same merge, same trace, same ledger — and
   the only thing that moves is wall time (``overlap_fraction`` /
   ``admit_stall_ms`` in :class:`GatewayStats`, ``gw_pipeline_*``
-  metrics). Both modes plan on the same dedicated *batch planner* (a
-  clone of the admission planner), so planner-internal cache evolution is
-  identical across modes and never interleaves with deferral re-scores.
+  metrics). Both modes plan on the same dedicated *batch planner* — a
+  clone of the admission planner with a PRIVATE carbon field and metrics
+  registry — so planner-internal cache evolution is identical across
+  modes and the planner thread shares no mutable caches with the
+  coordinator, whose in-process pumps and mid-pump deferral re-scores
+  keep hitting the fleet field. The clone's private metrics fold exactly
+  into the shared registry at every checkpoint capture and at the end of
+  each drive. When the gateway cannot isolate the batch planner this way
+  — a custom planner *subclass* (shared instance, re-entered by
+  promotion re-scores that fire inside the pump), or a bare controller
+  whose transfer engine live-feeds the planner's throughput model
+  between dispatch and claim — ``pipeline="on"`` plans at the batch
+  close on the coordinator instead (no overlap, identical plans), so the
+  oracle contract holds unconditionally.
 
 The gateway plans with a dedicated admission planner (base-capacity
 throughput model; for a :class:`ShardedFleet` the fleet-level planner,
@@ -66,6 +77,7 @@ import numpy as np
 
 from repro.core.controlplane.controller import (FleetController, FleetReport)
 from repro.core.controlplane.sharded import PumpQuanta
+from repro.core.obs.metrics import MetricsRegistry
 from repro.core.scheduler.planner import CarbonPlanner, Plan, TransferJob
 
 
@@ -129,7 +141,11 @@ class StreamingGateway:
     ``pipeline`` — ``"off"`` (sequential oracle, the default), ``"on"``
     (double-buffered: plan micro-batch N+1 on a planner thread while the
     workers drain toward its close), or ``"auto"`` (currently ``"on"``).
-    Bit-identical outputs either way; only wall time moves.
+    Bit-identical outputs either way; only wall time moves. Overlap
+    needs a batch planner the gateway can isolate (see
+    :meth:`_clone_planner`); with a custom planner subclass or a bare
+    controller's live-corrected planner, ``"on"`` plans at the batch
+    close like ``"off"`` and records zero pipelined batches.
     ``quanta`` — optional :class:`~repro.core.controlplane.sharded.PumpQuanta`:
     the watermark pumps run as an adaptive quantum schedule (coarse when
     no batch close or shock boundary is near, fine inside ``band_s`` of
@@ -215,6 +231,21 @@ class StreamingGateway:
         # deferral/backfill re-scores (which stay on self.planner, on the
         # coordinator thread).
         self._batch_planner = self._clone_planner(self.planner)
+        # the planner thread may only run concurrently with the watermark
+        # pump when the batch planner is the private clone above (own
+        # field, own registry) and nothing the coordinator mutates
+        # mid-pump feeds its inputs. A bare controller's transfer engine
+        # observes achieved throughput into its planner's model as jobs
+        # step/complete — between dispatch and claim — which would make
+        # an overlapped plan diverge from the plan-at-close oracle. When
+        # unsafe, pipeline="on" plans at the batch close exactly like
+        # "off" (zero pipelined batches in stats).
+        self._overlap_safe = (
+            self._batch_planner is not self.planner
+            and not any(
+                getattr(ctl, "engine", None) is not None
+                and ctl.engine.model is self._batch_planner.throughput
+                for ctl in self.controllers))
         self._inflight: set = set()    # gateway-admitted, not yet complete
         self._deferred: List[_Deferred] = []
         self._seq = 0
@@ -247,25 +278,40 @@ class StreamingGateway:
     @staticmethod
     def _clone_planner(src: CarbonPlanner) -> CarbonPlanner:
         """A dedicated batch planner for micro-batch admission: a fresh
-        ``CarbonPlanner`` sharing the source's FTNs, throughput model,
-        field and live shock pricing (``emission_scale_fn`` is a bound
-        method of the fleet, so the clone prices shocks injected later
-        too). Plans are pure functions of (job, shock schedule), so clone
-        and source plan bit-identically — the clone exists to give cache
-        evolution its own instance. A planner *subclass* (custom
-        admission policy) is not cloned: the subclass's own plan_batch is
-        the policy, so the gateway shares it (the pipelined dispatch
-        still claims before any deferral re-score runs, so the instance
-        is never used from two threads at once)."""
+        ``CarbonPlanner`` sharing the source's FTNs, throughput model and
+        live shock pricing (``emission_scale_fn`` is a bound method of
+        the fleet, so the clone prices shocks injected later too) — but
+        with a PRIVATE carbon field (thawed from a snapshot of the
+        source's) and a private metrics registry. The field's noise
+        tables and grid caches mutate on lookup (window re-anchor/extend
+        is a non-atomic del+rebind), so the pipelined planner thread
+        must never share them with the coordinator, whose in-process
+        pumps and mid-pump deferral re-scores hit the source field
+        concurrently; the hashed noise is a pure function, so the
+        private copy plans bit-identically. Registry instruments are
+        plain ``+=`` writes with the same hazard, so the clone records
+        into its own registry, folded exactly into the shared one at
+        quiescent points (:meth:`_fold_batch_planner_metrics`).
+
+        A planner *subclass* (custom admission policy) is not cloned:
+        the subclass's own plan_batch is the policy. The shared instance
+        is then never used from two threads — completion hooks fire
+        *inside* the watermark pump, i.e. between plan dispatch and
+        claim, so a capacity promotion would re-enter it from the
+        coordinator mid-plan — because ``_overlap_safe`` turns the
+        planner-thread dispatch off and the batch close plans inline,
+        exactly like ``pipeline="off"``."""
         if type(src) is not CarbonPlanner:
             return src
         clone = CarbonPlanner(src.ftns, throughput=src.throughput,
                               slot_s=src.slot_s, ci_fn=src.ci_fn,
-                              field=src.field, backend=src.backend,
+                              field=src.field.freeze().thaw(),
+                              backend=src.backend,
                               batch_backend=src.batch_backend)
         clone.emission_scale_fn = src.emission_scale_fn
         clone.capture_greedy = src.capture_greedy
-        clone._metrics = src._metrics
+        if src._metrics is not None:
+            clone._metrics = MetricsRegistry()
         return clone
 
     # --- the open loop ------------------------------------------------------
@@ -310,10 +356,12 @@ class StreamingGateway:
         # and claimed right after it, at the batch close — planning
         # overlaps the worker drain instead of serializing behind it. The
         # pool lives for one _drive; the finally below joins the thread
-        # so no plan call ever outlives (or races) the run.
+        # so no plan call ever outlives (or races) the run. Without an
+        # isolatable batch planner (_overlap_safe) no pool is built and
+        # _admit plans at the close, the "off" path.
         pool = ThreadPoolExecutor(max_workers=1,
                                   thread_name_prefix="gw-plan") \
-            if self.pipeline == "on" else None
+            if self.pipeline == "on" and self._overlap_safe else None
         try:
             pending = self._pull(it)
             while pending is not None:
@@ -373,6 +421,9 @@ class StreamingGateway:
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
+            # the planner thread is joined: fold its private metrics into
+            # the shared registry (exact, covers the "off" path too)
+            self._fold_batch_planner_metrics()
         # stream exhausted (or horizon cut): drain everything still queued,
         # re-draining after completion hooks promote deferred jobs
         def _due(ctl: FleetController) -> bool:
@@ -418,6 +469,10 @@ class StreamingGateway:
         if t_close + 1e-9 < self._next_ckpt_t:
             return
         from repro.core.controlplane import persistence
+        # the plan future is always claimed before a capture, so the
+        # batch planner is quiescent: fold its private metrics first so
+        # the captured registry counts every plan sweep up to the cut
+        self._fold_batch_planner_metrics()
         self.last_checkpoint = persistence.capture(self.fleet, gateway=self)
         if self.checkpoint_fn is not None:
             self.checkpoint_fn(self.last_checkpoint)
@@ -474,6 +529,21 @@ class StreamingGateway:
                         out[i] = plan
                 return out
         return self._batch_planner.plan_batch(list(jobs))
+
+    def _fold_batch_planner_metrics(self) -> None:
+        """Fold the batch planner's private registry into the shared one
+        (exact elementwise addition — :meth:`MetricsRegistry.absorb`),
+        then reset it. Called only from the coordinator thread at points
+        where no plan future is in flight (checkpoint capture, end of a
+        drive), so planner metric totals come out identical to a run
+        that recorded them in place — without the planner thread ever
+        writing an instrument another thread holds."""
+        bp = self._batch_planner
+        if bp is self.planner or bp._metrics is None:
+            return
+        if self.planner._metrics is not None:
+            self.planner._metrics.absorb(bp._metrics)
+        bp._metrics = MetricsRegistry()
 
     # --- admission ----------------------------------------------------------
     def _admit(self, batch: Sequence[TransferJob], t_close: float,

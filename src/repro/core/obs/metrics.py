@@ -162,6 +162,33 @@ class MetricsRegistry:
             self._metrics[key] = inst
         return inst
 
+    def absorb(self, other: "MetricsRegistry") -> None:
+        """Exact in-place fold of another registry — the live-object
+        counterpart of :func:`merged`: counters and gauges add, histogram
+        buckets add elementwise (bounds must match, as they always do for
+        :func:`log_bounds` products). ``other`` is left unmodified. This
+        is how a single-writer side registry (e.g. the streaming
+        gateway's batch-planner thread) folds back into the shared one at
+        a quiescent point instead of sharing instruments across threads.
+        """
+        for key, inst in other._metrics.items():
+            kind, name, labels = key
+            if kind == "histogram":
+                mine = self._metrics.get(key)
+                if mine is None:
+                    mine = Histogram(inst.bounds)
+                    self._metrics[key] = mine
+                if mine.bounds != inst.bounds:
+                    raise ValueError(
+                        f"histogram {name!r}: mismatched bounds")
+                mine.counts = [a + b for a, b in
+                               zip(mine.counts, inst.counts)]
+                mine.sum += inst.sum
+                mine.n += inst.n
+            else:
+                cls = Counter if kind == "counter" else Gauge
+                self._get(kind, name, labels, cls).value += inst.value
+
     def snapshot(self) -> Dict[str, List[dict]]:
         """Deterministic JSON-able snapshot, entries sorted by
         (name, labels) within each kind."""

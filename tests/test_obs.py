@@ -296,6 +296,42 @@ def test_gauge_merge_sums_per_shard_values(vals):
                             "value": float(sum(vals))}]
 
 
+@settings(max_examples=25, deadline=None)
+@given(shards=hst.lists(
+    hst.lists(hst.integers(min_value=0, max_value=10**6), max_size=30),
+    min_size=1, max_size=5))
+def test_absorb_is_exact_live_object_merge(shards):
+    """``absorb`` on live registries must equal ``merged`` over their
+    snapshots — the fold the streaming gateway uses to bring the
+    batch-planner thread's private registry back into the shared one at
+    quiescent points. The absorbed side must stay unmodified."""
+    base = MetricsRegistry()
+    base.counter("jobs_total").inc()
+    base.gauge("inflight").set(2.0)
+    base.histogram("depth").observe(3.0)
+    snaps = [base.snapshot()]
+    for vals in shards:
+        side = MetricsRegistry()
+        for v in vals:
+            side.counter("jobs_total").inc()
+            side.counter("bytes_total", node="a").inc(float(v))
+            side.gauge("inflight").set(float(v))
+            side.histogram("depth").observe(float(v))
+        before = side.snapshot()
+        snaps.append(before)
+        base.absorb(side)
+        assert side.snapshot() == before      # other is left unmodified
+    assert merged([base.snapshot()]) == merged(snaps)
+
+
+def test_absorb_refuses_mismatched_histogram_bounds():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("h", bounds=log_bounds(1e-3, 1e3)).observe(1.0)
+    b.histogram("h", bounds=log_bounds(1e-2, 1e2)).observe(1.0)
+    with pytest.raises(ValueError, match="mismatched bounds"):
+        a.absorb(b)
+
+
 def test_log_bounds_are_bit_identical_and_guarded():
     """Bounds derive from integer decade exponents, so every process
     computes the identical float tuple — the precondition for exact

@@ -507,3 +507,73 @@ print("OK")
     assert "OK" in proc.stdout
     got = np.load(out)
     assert got.tolist() == want.tolist()
+
+
+# --- effective CPU count resolves the process's own cgroup -------------------
+def _mk_cgroup_tree(tmp_path, layout, self_path):
+    """Build a fake cgroup v2 tree: ``layout`` maps a relative cgroup
+    path ('' = root) to its cpu.max content; ``self_path`` becomes the
+    /proc/self/cgroup v2 entry."""
+    root = tmp_path / "cgroup"
+    for rel, content in layout.items():
+        d = root / rel if rel else root
+        d.mkdir(parents=True, exist_ok=True)
+        (d / "cpu.max").write_text(content)
+    proc = tmp_path / "proc_self_cgroup"
+    proc.write_text(f"0::{self_path}\n")
+    return str(root), str(proc)
+
+
+def test_cgroup_quota_found_on_own_nested_cgroup_not_root():
+    """The root says 'max' (unlimited) while the process's own nested
+    cgroup carries the throttle — the systemd-slice / cgroup-namespaced
+    container shape the root-only read used to miss."""
+    from repro.core.controlplane.parallel import _cgroup_cpu_quota
+    import pathlib
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        tmp = pathlib.Path(td)
+        root, proc = _mk_cgroup_tree(
+            tmp,
+            {"": "max 100000",
+             "a.slice": "max 100000",
+             "a.slice/runner": "250000 100000"},
+            "/a.slice/runner")
+        assert _cgroup_cpu_quota(root, proc) == (3, "/a.slice/runner")
+
+
+def test_cgroup_quota_takes_tightest_ancestor():
+    from repro.core.controlplane.parallel import _cgroup_cpu_quota
+    import pathlib
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        tmp = pathlib.Path(td)
+        root, proc = _mk_cgroup_tree(
+            tmp,
+            {"": "max 100000",
+             "a.slice": "200000 100000",     # 2 CPUs at the slice
+             "a.slice/runner": "600000 100000"},  # looser leaf: 6
+            "/a.slice/runner")
+        assert _cgroup_cpu_quota(root, proc) == (2, "/a.slice")
+
+
+def test_cgroup_quota_none_without_any_limit():
+    from repro.core.controlplane.parallel import _cgroup_cpu_quota
+    import pathlib
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        tmp = pathlib.Path(td)
+        root, proc = _mk_cgroup_tree(
+            tmp, {"": "max 100000", "a": "max 100000"}, "/a")
+        assert _cgroup_cpu_quota(root, proc) is None
+        # v1-only host: no cpu.max files, no /proc v2 entry
+        assert _cgroup_cpu_quota(str(tmp / "nope"),
+                                 str(tmp / "missing")) is None
+
+
+def test_effective_cpu_count_records_quota_in_note():
+    from repro.core.controlplane.parallel import effective_cpu_count
+    eff, note = effective_cpu_count()
+    assert eff >= 1
+    assert "effective cpus" in note
+    assert ("cgroup cpu.max" in note) or ("no cgroup quota" in note)

@@ -12,8 +12,9 @@ import multiprocessing as mp
 import pytest
 
 from repro.core.carbon.intensity import PAPER_WINDOW_T0
-from repro.core.controlplane import (PumpQuanta, ShardedFleet,
-                                     StreamingGateway, quantum_schedule)
+from repro.core.controlplane import (FleetController, PumpQuanta,
+                                     ShardedFleet, StreamingGateway,
+                                     quantum_schedule)
 from repro.core.controlplane import persistence
 from repro.core.scheduler.overlay import FTN
 from repro.core.scheduler.planner import SLA, CarbonPlanner, TransferJob
@@ -166,6 +167,95 @@ def test_pipeline_metrics_recorded():
              for e in entries}
     assert "gw_pipeline_batches_total" in names
     assert "gw_pipeline_plan_wall_s" in names
+
+
+# --- planner-thread isolation: private field/registry, degradations ----------
+def test_batch_planner_clone_is_private():
+    """The batch planner must share no mutable state with the
+    coordinator's planner: the carbon field's noise tables re-anchor via
+    a non-atomic del+rebind on lookup and registry instruments are plain
+    ``+=`` writes, so the pipelined planner thread gets its own copies.
+    Over a sharded fleet (whose fleet-level throughput model is never
+    observed into) the clone is overlap-safe."""
+    fleet = _fleet(obs=True)
+    gw = StreamingGateway(fleet, pipeline="on")
+    bp, pl = gw._batch_planner, gw.planner
+    assert bp is not pl
+    assert bp.field is not pl.field
+    assert bp._metrics is not None and bp._metrics is not pl._metrics
+    assert gw._overlap_safe
+
+
+def _counter_total(rep, name):
+    return sum(e["value"] for e in rep.metrics["counters"]
+               if e["name"] == name)
+
+
+def test_planner_metrics_fold_is_exact_across_modes():
+    """The clone's private registry folds back into the shared one at
+    every checkpoint and at run end (reset after each absorb), so the
+    merged planner counters of a pipelined, checkpointing run equal the
+    sequential oracle's exactly — nothing dropped, nothing counted
+    twice."""
+    r_off, _ = _stream("off", obs=True, pipeline="off")
+    r_on, _ = _stream("off", obs=True, pipeline="on",
+                      checkpoint_every_s=3600.0)
+    for name in ("planner_plan_batches_total",
+                 "planner_cells_scored_total"):
+        tot = _counter_total(r_on, name)
+        assert tot > 0
+        assert tot == _counter_total(r_off, name)
+
+
+def test_subclass_planner_pipelined_degrades_to_inline_and_matches():
+    """A planner subclass is the admission policy — it cannot be cloned,
+    and completion hooks re-enter it from the coordinator mid-pump, so
+    ``pipeline="on"`` must keep the bit-identical contract by planning
+    at the batch close: zero pipelined batches, same totals as off."""
+    class TaggedPlanner(CarbonPlanner):
+        pass
+
+    def _run(pipeline):
+        fleet = _fleet()
+        gw = StreamingGateway(fleet, window_s=900.0, max_batch=16,
+                              planner=TaggedPlanner(FTNS,
+                                                    batch_backend="numpy"),
+                              pipeline=pipeline)
+        rep = gw.run(_jobs(), until=END)
+        return rep, gw
+
+    r_off, _ = _run("off")
+    r_on, gw = _run("on")
+    assert gw._batch_planner is gw.planner
+    assert not gw._overlap_safe
+    assert gw.stats().n_pipelined_batches == 0
+    assert _totals(r_off) == _totals(r_on)
+
+
+def test_bare_controller_pipelined_degrades_and_matches():
+    """A bare FleetController's transfer engine observes achieved
+    throughput into its planner's model as jobs step — between plan
+    dispatch and claim — so overlapping would diverge from the
+    plan-at-close oracle. The gateway detects the shared model, keeps
+    the private clone but plans inline, and still matches off bit for
+    bit."""
+    jobs = _jobs(18)
+
+    def _run(pipeline):
+        ctl = FleetController(FTNS, migration_threshold=250.0,
+                              planner=CarbonPlanner(
+                                  FTNS, batch_backend="numpy"))
+        gw = StreamingGateway(ctl, window_s=900.0, max_batch=16,
+                              pipeline=pipeline)
+        rep = gw.run(jobs, until=END)
+        return rep, gw
+
+    r_off, _ = _run("off")
+    r_on, gw = _run("on")
+    assert gw._batch_planner is not gw.planner
+    assert not gw._overlap_safe
+    assert gw.stats().n_pipelined_batches == 0
+    assert _totals(r_off) == _totals(r_on)
 
 
 # --- adaptive quanta / per-shard frontends are outcome-neutral ---------------
